@@ -1,0 +1,60 @@
+"""Paper §3.1 / Fig. 2 / Eq. 1-2: sub-precision statistics on a real model.
+
+Measures, on the trained benchmark LM:
+  * natural MSB4 sparsity per projection site (the §3.1 observation —
+    SiLU-gated down_proj inputs are the sparsest, q_proj inputs the least),
+  * the zero-point-adjustment effect on SiLU-like activations,
+  * Eq. 1 compression % and Eq. 2 ops-reduction % at measured sparsity,
+  * exact wire-format accounting (encoded_bytes) vs dense int8.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import BENCH_DATA, probe_linear_inputs, \
+    trained_smoke_model
+from repro.core.quantize import quantize_activations
+from repro.core.sparqle import (compression_percent, encoded_bytes,
+                                ops_reduction_percent, subprecision_sparsity)
+from repro.data.pipeline import SyntheticLM
+
+
+def run(emit) -> None:
+    cfg, params = trained_smoke_model()
+    data = SyntheticLM(BENCH_DATA)
+    batch = {"tokens": jnp.asarray(data.batch_at(10_000)["tokens"])}
+
+    sites = probe_linear_inputs(cfg, params, batch)
+    s_by_site = {}
+    for name, q8 in sites:
+        s = float(subprecision_sparsity(q8))
+        s_by_site[name] = s
+        emit(f"compression/sparsity_{name}", s * 100, "% MSB4==0")
+        emit(f"compression/eq1_{name}",
+             float(compression_percent(s)), "% bytes saved (Eq.1)")
+        emit(f"compression/eq2_{name}",
+             float(ops_reduction_percent(s)), "% int4 ops skipped (Eq.2)")
+        n = q8.size
+        emit(f"compression/wire_bytes_{name}",
+             encoded_bytes(q8.shape, s) / n, "B/elem vs 1.0 dense")
+
+    # the paper's §3.1 ordering claim: SiLU-gated site sparser than q input
+    emit("compression/silu_vs_q_gap",
+         (s_by_site["down_proj_in"] - s_by_site["q_proj_in"]) * 100,
+         "pp (paper reports 89 vs 32 on Llama3)")
+
+    # zero-point adjustment on a SiLU output (paper §3.1)
+    import jax
+    x = jax.nn.silu(jax.random.normal(jax.random.PRNGKey(0),
+                                      (4096, 256)) * 2.0)
+    s_sym = float(subprecision_sparsity(
+        quantize_activations(x, zero_point=False).q))
+    s_zp = float(subprecision_sparsity(
+        quantize_activations(x, zero_point=True).q))
+    emit("compression/zero_point_gain", (s_zp - s_sym) * 100,
+         f"pp sparsity from zero-point shift ({s_sym*100:.1f} -> "
+         f"{s_zp*100:.1f})")
+
+
+if __name__ == "__main__":
+    run(lambda n, v, d: print(f"{n},{v:.4g},{d}"))

@@ -1,0 +1,118 @@
+"""Shared benchmark utilities: a trained small LM + activation probes.
+
+Several paper figures need a model whose activations have *learned*
+structure (random-init activations are near-uniform and show little
+sub-precision sparsity). ``trained_smoke_model`` trains a ~6M-param
+llama-style model on the synthetic Markov corpus for a few hundred steps
+and caches the checkpoint under runs/bench_model/ so every benchmark
+reuses it.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import store
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch import steps as S
+from repro.models import model as M
+from repro.models.schema import init_params
+from repro.models.schema_builder import build_schema
+from repro.optim.adamw import OptConfig, init_opt_state
+
+RUNS = os.path.join(os.path.dirname(__file__), "..", "runs")
+
+BENCH_CFG = ModelConfig(
+    name="bench-llama-6m", family="transformer", n_layers=4, d_model=256,
+    n_heads=8, n_kv_heads=4, d_ff=704, vocab=512, rope_theta=10_000.0)
+
+BENCH_DATA = DataConfig(vocab=512, seq_len=128, global_batch=16, seed=7)
+
+
+def trained_smoke_model(steps: int = 300) -> Tuple[ModelConfig, Dict]:
+    """Train (or load) the benchmark LM. Returns (cfg, float params)."""
+    cfg = BENCH_CFG
+    ckdir = os.path.join(RUNS, "bench_model")
+    latest = store.latest_step(ckdir)
+    params = init_params(build_schema(cfg), jax.random.PRNGKey(0))
+    if latest is not None and latest >= steps:
+        return cfg, store.restore(ckdir, latest, params)
+    ocfg = OptConfig(lr=1e-3, warmup_steps=20, total_steps=steps)
+    step = jax.jit(S.make_train_step(cfg, ocfg, S.TrainKnobs(remat=False)),
+                   donate_argnums=0)
+    state = S.TrainState(params, init_opt_state(params, ocfg))
+    data = SyntheticLM(BENCH_DATA)
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        state, m = step(state, batch)
+        if i % 100 == 0:
+            print(f"  [bench model] step {i} loss {float(m['loss']):.3f}",
+                  flush=True)
+    params = jax.device_get(state.params)
+    store.save(ckdir, params, steps)
+    return cfg, params
+
+
+def eval_ppl(cfg: ModelConfig, params, n_batches: int = 4,
+             start: int = 10_000) -> float:
+    """Perplexity on held-out synthetic batches."""
+    data = SyntheticLM(BENCH_DATA)
+    tot, cnt = 0.0, 0
+    for i in range(n_batches):
+        b = data.batch_at(start + i)
+        logits = M.forward(cfg, params,
+                           {"tokens": jnp.asarray(b["tokens"])})
+        lg = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(
+            lg, jnp.asarray(b["targets"])[..., None], axis=-1)[..., 0]
+        tot += float(jnp.sum(lse - gold))
+        cnt += gold.size
+    return float(np.exp(tot / cnt))
+
+
+def probe_linear_inputs(cfg: ModelConfig, params,
+                        batch) -> List[Tuple[str, jax.Array]]:
+    """Int8 activations entering each projection class of layer 0.
+
+    Returns [(site, int8 activations)] for q/o/gate/up/down-equivalent
+    sites — the per-site tensors behind Fig. 8 / the §3.1 statistics.
+    """
+    from repro.core.quantize import quantize_activations
+    from repro.models.layers import rms_norm
+
+    p0 = jax.tree_util.tree_map(lambda x: x[0],
+                                params["stages"]["s0"]["p0"])
+    x = M.embed_inputs(cfg, params, batch)[0]
+    sites = []
+    h = rms_norm(x, p0["ln"]["gamma"])                    # attn input
+    sites.append(("q_proj_in", h))
+    q = h @ p0["wq"]
+    k = h @ p0["wk"]
+    v = h @ p0["wv"]
+    from repro.models.layers import AttnSpec, flash_attention, rope
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    pos = jnp.arange(x.shape[1])
+    qh = rope(q.reshape(*q.shape[:-1], H, hd), pos, cfg.rope_theta)
+    kh = rope(k.reshape(*k.shape[:-1], KVH, hd), pos, cfg.rope_theta)
+    vh = v.reshape(*v.shape[:-1], KVH, hd)
+    o = flash_attention(qh, kh, vh, AttnSpec()).reshape(*x.shape[:-1],
+                                                        H * hd)
+    sites.append(("o_proj_in", o))
+    x = x + o @ p0["wo"]
+    h2 = rms_norm(x, p0["ln2"]["gamma"])
+    sites.append(("gate_up_in", h2))
+    act = jax.nn.silu(h2 @ p0["w_gate"]) * (h2 @ p0["w_up"])
+    sites.append(("down_proj_in", act))                   # SiLU-gated
+
+    out = []
+    for name, t in sites:
+        q8 = quantize_activations(t.reshape(-1, t.shape[-1]), bits=8,
+                                  per_token=True).q
+        out.append((name, q8))
+    return out

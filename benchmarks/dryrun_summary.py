@@ -1,0 +1,51 @@
+"""Regenerate the EXPERIMENTS.md §Dry-run appendix from runs/dryrun/.
+
+    PYTHONPATH=src:. python -m benchmarks.dryrun_summary [--mesh all]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RUNS = os.path.join(os.path.dirname(__file__), "..", "runs", "dryrun")
+
+
+def table(mesh: str) -> str:
+    rows = [f"### {mesh}\n",
+            "| cell | flops/dev | HLO coll B/dev | arg+temp GiB/dev | "
+            "arg+out GiB/dev | compile s |\n",
+            "|---|---|---|---|---|---|\n"]
+    for path in sorted(glob.glob(os.path.join(RUNS, mesh, "*.json"))):
+        r = json.load(open(path))
+        if "error" in r:
+            rows.append(f"| {os.path.basename(path)} | ERROR |\n")
+            continue
+        m = r["memory"]
+        rows.append(
+            f"| {r['arch']}/{r['shape']} | {r['flops_hlo']:.2e} | "
+            f"{r['collective_bytes'].get('total', 0):.2e} | "
+            f"{(m['argument_size_b'] + m['temp_size_b'])/2**30:.2f} | "
+            f"{(m['argument_size_b'] + m['output_size_b'])/2**30:.2f} | "
+            f"{r['compile_s']} |\n")
+    return "".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="all")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    meshes = (sorted(os.listdir(RUNS)) if args.mesh == "all"
+              else [args.mesh])
+    out = "\n".join(table(m) for m in meshes if
+                    os.path.isdir(os.path.join(RUNS, m)))
+    print(out)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,value,derived-from`` CSV rows. Modules:
+
+  * bench_compression — §3.1 / Fig. 2 / Eq. 1-2 statistics
+  * bench_costmodel   — Fig. 6 + §5.2 accelerator model vs paper claims
+  * bench_k_sweep     — Fig. 7 accuracy/sparsity tradeoff across k
+  * bench_layerwise   — Fig. 8 per-projection latency trend
+  * bench_accuracy    — Table 2 analogue on the self-trained LM
+  * bench_kernels     — tile-skip co-design validation + kernel timings
+
+Roofline (deliverable g) is separate: ``python -m benchmarks.roofline``
+reads the dry-run artifacts.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_accuracy, bench_compression, bench_costmodel,
+                        bench_k_sweep, bench_kernels, bench_layerwise)
+
+MODULES = [
+    ("compression", bench_compression.run),
+    ("costmodel", lambda emit: bench_costmodel.run(emit, False)),
+    ("k_sweep", bench_k_sweep.run),
+    ("layerwise", bench_layerwise.run),
+    ("accuracy", bench_accuracy.run),
+    ("kernels", bench_kernels.run),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,value,derived_from")
+    failures = 0
+    for name, fn in MODULES:
+        if only and only not in name:
+            continue
+        t0 = time.time()
+        try:
+            fn(lambda n, v, d: print(f"{n},{v:.6g},{d}", flush=True))
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark module(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Train a ~100M-param LM for a few hundred steps with full fault tolerance.
+
+Demonstrates the production training substrate end-to-end on CPU:
+synthetic packed data, microbatched AdamW, async checkpointing, an
+injected mid-run failure with automatic restore+replay, and a final
+resume-from-checkpoint — the exact machinery `launch/train.py` runs at
+pod scale.
+
+Run:  PYTHONPATH=src python examples/train_with_failover.py
+      (--steps 300 --d-model 512 for the full ~100M config; the default
+       keeps CI-sized wall time)
+"""
+import argparse
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import store
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.distributed.fault import FaultInjector, RestartableLoop
+from repro.launch import steps as S
+from repro.models.schema import init_params, param_count
+from repro.models.schema_builder import build_schema
+from repro.optim.adamw import OptConfig, init_opt_state
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=60)
+ap.add_argument("--d-model", type=int, default=256)
+ap.add_argument("--layers", type=int, default=4)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--batch", type=int, default=8)
+args = ap.parse_args()
+
+cfg = ModelConfig(
+    name="demo-lm", family="transformer", n_layers=args.layers,
+    d_model=args.d_model, n_heads=8, n_kv_heads=4,
+    d_ff=int(2.75 * args.d_model), vocab=2048)
+schema = build_schema(cfg)
+print(f"model: {param_count(schema)/1e6:.1f}M params")
+
+ocfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=args.steps)
+knobs = S.TrainKnobs(microbatch=args.batch // 2, ce_chunk=64)
+step_fn = jax.jit(S.make_train_step(cfg, ocfg, knobs), donate_argnums=0)
+params = init_params(schema, jax.random.PRNGKey(0))
+state = S.TrainState(params, init_opt_state(params, ocfg))
+data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                              global_batch=args.batch))
+
+ckdir = tempfile.mkdtemp(prefix="repro_failover_")
+losses = []
+
+
+def logged(st, batch):
+    st, m = step_fn(st, batch)
+    losses.append(float(m["loss"]))
+    if len(losses) % 10 == 0:
+        print(f"  step {len(losses):4d} loss {losses[-1]:.4f}")
+    return st, m
+
+
+def make_batch(i):
+    return {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+
+
+fail_at = args.steps // 2
+print(f"training {args.steps} steps; injecting a failure at step "
+      f"{fail_at} (checkpoint every 20, async)")
+loop = RestartableLoop(
+    logged, make_batch, ckdir, ckpt_every=20, async_ckpt=True,
+    injector=FaultInjector(plan={fail_at: "fail"}))
+state, _ = loop.run(state, 0, args.steps)
+print(f"loop report: {loop.report}")
+print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+      f"(replayed steps included)")
+
+# resume-from-checkpoint path (what --resume auto does)
+latest = store.latest_step(ckdir)
+state2 = store.restore(ckdir, latest, state)
+print(f"restored step {latest}; params bit-identical: "
+      f"{bool(jnp.all(jax.tree_util.tree_leaves(state2.params)[0] == jax.tree_util.tree_leaves(state.params)[0]))}")
+shutil.rmtree(ckdir)

@@ -1,0 +1,224 @@
+"""Checkpointing: npz shards + manifest, async writes, elastic restore.
+
+Layout of one checkpoint::
+
+    <dir>/step_000123/
+        manifest.json      # step, tree structure, leaf shapes/dtypes, status
+        shard_<i>.npz      # flattened leaves, chunked ~512MB per shard
+
+A checkpoint is only valid once its manifest records ``"status": "complete"``
+(written last — a process killed mid-write never yields a loadable but
+corrupt state; ``latest_step`` skips incomplete ones). Writes go through a
+background thread (``AsyncWriter``) so the train loop only blocks on the
+previous write (one-deep pipeline, like Orbax async).
+
+*Elastic restore*: leaves are stored as full (unsharded) logical arrays, so
+a checkpoint written on one mesh restores onto any other mesh/topology —
+``restore`` takes the target shardings and lays shards out accordingly.
+Restoring a smaller/larger data-parallel world therefore "just works",
+which is the checkpoint half of elastic scaling.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> flat leaves
+# ---------------------------------------------------------------------------
+
+def _flatten(tree: Any) -> Tuple[List[np.ndarray], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return [np.asarray(l) for l in leaves], treedef
+
+
+# npz can't represent ml_dtypes (bfloat16 etc.); store them as a same-width
+# integer view and restore via the manifest's recorded dtype string.
+_VIEW_FOR_WIDTH = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _encode_leaf(arr: np.ndarray) -> np.ndarray:
+    if arr.dtype.kind == "V" or arr.dtype.name not in np.sctypeDict:
+        return arr.view(_VIEW_FOR_WIDTH[arr.dtype.itemsize])
+    return arr
+
+
+def _decode_leaf(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if arr.dtype.name == dtype_name:
+        return arr
+    try:
+        target = np.dtype(dtype_name)
+    except TypeError:
+        import ml_dtypes
+        target = np.dtype(getattr(ml_dtypes, dtype_name))
+    if target.itemsize == arr.dtype.itemsize and arr.dtype.kind in "uiV":
+        return arr.view(target)
+    return arr.astype(target)
+
+
+def save(path: str, tree: Any, step: int,
+         shard_bytes: int = 512 * 2**20) -> str:
+    """Synchronous checkpoint write. Returns the checkpoint directory."""
+    ckdir = os.path.join(path, f"step_{step:09d}")
+    tmp = ckdir + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves, treedef = _flatten(tree)
+    manifest: Dict[str, Any] = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "leaves": [{"shape": list(l.shape), "dtype": str(l.dtype)}
+                   for l in leaves],
+        "shards": [],
+        "status": "writing",
+    }
+    shard, size, shard_idx = {}, 0, 0
+
+    def flush():
+        nonlocal shard, size, shard_idx
+        if not shard:
+            return
+        np.savez(os.path.join(tmp, f"shard_{shard_idx}.npz"), **shard)
+        manifest["shards"].append(
+            {"file": f"shard_{shard_idx}.npz", "keys": sorted(shard)})
+        shard, size, shard_idx = {}, 0, shard_idx + 1
+
+    for i, leaf in enumerate(leaves):
+        shard[f"leaf_{i}"] = _encode_leaf(leaf)
+        size += leaf.nbytes
+        if size >= shard_bytes:
+            flush()
+    flush()
+
+    manifest["status"] = "complete"
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(ckdir):
+        shutil.rmtree(ckdir)
+    os.rename(tmp, ckdir)          # atomic publish
+    return ckdir
+
+
+def latest_step(path: str) -> Optional[int]:
+    """Largest step with a complete manifest, or None."""
+    if not os.path.isdir(path):
+        return None
+    best = None
+    for name in os.listdir(path):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if not m:
+            continue
+        man = os.path.join(path, name, "manifest.json")
+        try:
+            with open(man) as f:
+                if json.load(f).get("status") != "complete":
+                    continue
+        except (OSError, json.JSONDecodeError):
+            continue
+        step = int(m.group(1))
+        best = step if best is None else max(best, step)
+    return best
+
+
+def restore(path: str, step: int, like: Any,
+            shardings: Optional[Any] = None) -> Any:
+    """Restore a checkpoint into the structure of ``like``.
+
+    ``shardings``: optional pytree of NamedShardings (same structure) —
+    leaves are device_put with them, which is what makes restore *elastic*:
+    the stored arrays are logical/unsharded, the target mesh is free.
+    """
+    ckdir = os.path.join(path, f"step_{step:09d}")
+    with open(os.path.join(ckdir, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["status"] == "complete", ckdir
+    flat: Dict[str, np.ndarray] = {}
+    for sh in manifest["shards"]:
+        with np.load(os.path.join(ckdir, sh["file"])) as z:
+            for k in sh["keys"]:
+                flat[k] = z[k]
+    leaves_ref, treedef = jax.tree_util.tree_flatten(like)
+    assert len(leaves_ref) == manifest["n_leaves"], (
+        len(leaves_ref), manifest["n_leaves"])
+    out = []
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves_ref))
+    for i, ref in enumerate(leaves_ref):
+        arr = _decode_leaf(flat[f"leaf_{i}"],
+                           manifest["leaves"][i]["dtype"])
+        assert tuple(arr.shape) == tuple(ref.shape), (
+            i, arr.shape, ref.shape)
+        a = jnp.asarray(arr, dtype=ref.dtype)
+        if shard_leaves[i] is not None:
+            a = jax.device_put(a, shard_leaves[i])
+        out.append(a)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def prune(path: str, keep: int = 3) -> None:
+    """Delete all but the newest ``keep`` complete checkpoints."""
+    if not os.path.isdir(path):
+        return
+    steps = sorted(
+        int(m.group(1)) for m in
+        (re.fullmatch(r"step_(\d+)", n) for n in os.listdir(path)) if m)
+    for s in steps[:-keep] if keep else steps:
+        shutil.rmtree(os.path.join(path, f"step_{s:09d}"), ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# async writer (one-deep pipeline)
+# ---------------------------------------------------------------------------
+
+class AsyncWriter:
+    """Background checkpoint writer; the step loop never blocks on I/O
+    (except to bound the pipeline at one in-flight write)."""
+
+    def __init__(self, path: str, keep: int = 3):
+        self.path = path
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            tree, step = item
+            try:
+                save(self.path, tree, step)
+                prune(self.path, self.keep)
+            except BaseException as e:   # surfaced on next submit/close
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, tree: Any, step: int) -> None:
+        if self._err:
+            raise RuntimeError("async checkpoint write failed") from self._err
+        # materialize on host *now* so the step loop can donate buffers
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+        self._q.put((host_tree, step))
+
+    def close(self) -> None:
+        self._q.join()
+        self._q.put(None)
+        self._thread.join()
+        if self._err:
+            raise RuntimeError("async checkpoint write failed") from self._err

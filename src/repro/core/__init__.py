@@ -1,0 +1,18 @@
+"""SPARQLe core: codec, quantization, clipping, cost model, reference matmul."""
+from repro.core.sparqle import (  # noqa: F401
+    SparqleActivation, encode, decode, subprecision_sparsity,
+    compression_percent, ops_reduction_percent, tile_population, tile_sparsity,
+    LP_LOW, LP_HIGH,
+)
+from repro.core.quantize import (  # noqa: F401
+    QuantizedTensor, quantize_weights, quantize_activations, quantize_kv,
+    fake_quantize,
+)
+from repro.core.clipping import (  # noqa: F401
+    column_importance, importance_mask, importance_mask_tile_aligned,
+    apply_clipping, soft_clipping, global_calibrate, learn_clipping_constants,
+    init_clip_params, enhanced_sparsity,
+)
+from repro.core.sparse_matmul import (  # noqa: F401
+    sparqle_matmul_xla, quantized_linear_sparqle,
+)

@@ -1,0 +1,233 @@
+"""Sub-precision sparsity enhancement (paper §3.2, Algorithm 1).
+
+Clipping pushes int8 activation values into the MSB4==0 range [0, 15]:
+values in [l, 0) clip to 0, values in (15, h] clip to 15 — but only inside
+the ``k``-percent *least important* activation columns, where the importance
+of activation column j is the L1 norm of weight row j (errors in column j of
+A are scaled by row j of W in A·W).
+
+Two calibration modes:
+  * ``global_calibrate`` — sweep one (l, h) pair for the whole model on a
+    calibration set, pick the best error/sparsity tradeoff (paper: Llama2/3).
+  * ``learn_clipping_constants`` — Algorithm 1: per-layer trainable (l, h),
+    all weights frozen, loss = MSE(clip, base) - alpha * mean(clip mask)
+    (Eq. 3), optimized with a sigmoid-relaxed soft clip (paper: BitNet).
+
+All clipping operates in the integer (post-quantization-scale) domain, where
+the MSB4==0 range is exactly [LP_LOW, LP_HIGH] = [0, 15].
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparqle import LP_HIGH, LP_LOW, subprecision_sparsity
+
+
+# ---------------------------------------------------------------------------
+# Column importance (precomputed offline from weights; zero runtime overhead)
+# ---------------------------------------------------------------------------
+
+def column_importance(w: jax.Array) -> jax.Array:
+    """L1 norm of each weight row. ``w`` is (K, N) for an A(M,K) @ W(K,N)."""
+    return jnp.sum(jnp.abs(w), axis=-1)
+
+
+def importance_mask(w: jax.Array, k_percent: float) -> jax.Array:
+    """Boolean (K,) mask, True on the k% least-important activation columns.
+
+    The paper stores this as a binary mask computed offline; we do the same
+    (it becomes a constant folded into the serving graph).
+    """
+    imp = column_importance(w)
+    kk = int(imp.shape[0] * k_percent / 100.0 + 0.5)
+    if kk <= 0:
+        return jnp.zeros(imp.shape, bool)
+    # threshold at the kk-th smallest importance
+    thresh = jnp.sort(imp)[kk - 1]
+    return imp <= thresh
+
+
+def importance_mask_tile_aligned(
+    w: jax.Array, k_percent: float, tile_k: int
+) -> jax.Array:
+    """Tile-aligned variant (DESIGN.md §2 co-design note).
+
+    Selects whole ``tile_k``-wide column *blocks* by block-summed importance so
+    that clipped columns align with the Pallas kernel's K-tiling — this is
+    what converts element-level sub-precision sparsity into skippable MSB4
+    tiles on a dense systolic array.
+    """
+    imp = column_importance(w)
+    k = imp.shape[0]
+    pad = (-k) % tile_k
+    imp_p = jnp.pad(imp, (0, pad), constant_values=jnp.inf)
+    blocks = imp_p.reshape(-1, tile_k).sum(axis=1)
+    n_blocks = blocks.shape[0]
+    kk = int(n_blocks * k_percent / 100.0 + 0.5)
+    if kk <= 0:
+        return jnp.zeros((k,), bool)
+    thresh = jnp.sort(blocks)[kk - 1]
+    block_mask = blocks <= thresh
+    full = jnp.repeat(block_mask, tile_k)[:k]
+    return full
+
+
+# ---------------------------------------------------------------------------
+# Clipping application (deployment: hard; calibration: sigmoid-relaxed)
+# ---------------------------------------------------------------------------
+
+def apply_clipping(
+    x_int: jax.Array, col_mask: jax.Array, l: jax.Array | float, h: jax.Array | float
+) -> jax.Array:
+    """Hard clipping in the integer domain (deployment path).
+
+    ``x_int`` is (..., K) integer-domain activations; ``col_mask`` is (K,).
+    [l, 0) -> LP_LOW, (15, h] -> LP_HIGH; values outside [l, h] untouched.
+    """
+    x = x_int.astype(jnp.int32)
+    clip_lo = col_mask & (x >= jnp.asarray(l, jnp.int32)) & (x < LP_LOW)
+    clip_hi = col_mask & (x > LP_HIGH) & (x <= jnp.asarray(h, jnp.int32))
+    y = jnp.where(clip_lo, LP_LOW, jnp.where(clip_hi, LP_HIGH, x))
+    return y.astype(x_int.dtype)
+
+
+def clip_fraction(
+    x_int: jax.Array, col_mask: jax.Array, l: jax.Array | float, h: jax.Array | float
+) -> jax.Array:
+    """Fraction of elements the (l, h) clip actually moves (the mask of Eq. 3)."""
+    x = x_int.astype(jnp.int32)
+    clip_lo = col_mask & (x >= jnp.asarray(l, jnp.int32)) & (x < LP_LOW)
+    clip_hi = col_mask & (x > LP_HIGH) & (x <= jnp.asarray(h, jnp.int32))
+    return jnp.mean((clip_lo | clip_hi).astype(jnp.float32))
+
+
+def soft_clipping(
+    x_int: jax.Array,
+    col_mask: jax.Array,
+    l: jax.Array,
+    h: jax.Array,
+    tau: float = 1.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Differentiable relaxation used by Algorithm 1 training.
+
+    Returns (clipped activations, soft clip mask). The sigmoid gates pass
+    gradients to l and h; at tau -> 0 this converges to ``apply_clipping``.
+    """
+    x = x_int.astype(jnp.float32)
+    in_lo_region = (x < LP_LOW).astype(jnp.float32)
+    in_hi_region = (x > LP_HIGH).astype(jnp.float32)
+    m_lo = jax.nn.sigmoid((x - l) / tau) * in_lo_region * col_mask
+    m_hi = jax.nn.sigmoid((h - x) / tau) * in_hi_region * col_mask
+    y = x * (1.0 - m_lo - m_hi) + m_lo * LP_LOW + m_hi * LP_HIGH
+    return y, m_lo + m_hi
+
+
+# ---------------------------------------------------------------------------
+# Global calibration (sweep)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SweepResult:
+    l: int
+    h: int
+    error: float       # calibration MSE between clipped and base outputs
+    sparsity: float    # resulting mean sub-precision sparsity
+    score: float       # sparsity - lam * normalized error
+
+
+def global_calibrate(
+    eval_fn: Callable[[int, int], Tuple[jax.Array, jax.Array]],
+    l_candidates=(-4, -8, -12, -16, -24, -32),
+    h_candidates=(19, 23, 31, 39, 47, 63),
+    lam: float = 10.0,
+) -> SweepResult:
+    """Sweep (l, h); ``eval_fn(l, h) -> (mse, sparsity)`` on calibration data.
+
+    Picks the candidate maximizing ``sparsity - lam * mse_norm`` (the paper's
+    "best calibration error / sub-precision sparsity tradeoff").
+    """
+    results = []
+    for l in l_candidates:
+        for h in h_candidates:
+            mse, sp = eval_fn(int(l), int(h))
+            results.append((int(l), int(h), float(mse), float(sp)))
+    errs = jnp.asarray([r[2] for r in results])
+    norm = jnp.maximum(jnp.max(errs), 1e-12)
+    best = None
+    for (l, h, mse, sp) in results:
+        score = sp - lam * mse / float(norm)
+        if best is None or score > best.score:
+            best = SweepResult(l=l, h=h, error=mse, sparsity=sp, score=float(score))
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: layerwise learned clipping constants
+# ---------------------------------------------------------------------------
+
+ClipParams = Dict[str, jax.Array]  # {"l": (n_layers,), "h": (n_layers,)}
+
+
+def init_clip_params(n_layers: int, l0: float = -8.0, h0: float = 23.0) -> ClipParams:
+    return {
+        "l": jnp.full((n_layers,), l0, jnp.float32),
+        "h": jnp.full((n_layers,), h0, jnp.float32),
+    }
+
+
+def learn_clipping_constants(
+    apply_clip: Callable[[ClipParams, jax.Array], Tuple[jax.Array, jax.Array]],
+    apply_base: Callable[[jax.Array], jax.Array],
+    dataset: jax.Array,
+    clip_params: ClipParams,
+    *,
+    epochs: int = 23,
+    lr: float = 0.5,
+    alpha: float = 0.05,
+) -> Tuple[ClipParams, list]:
+    """Algorithm 1 (paper §3.2).
+
+    ``apply_clip(params, batch) -> (outputs, mean_clip_mask)`` runs the model
+    with sigmoid-relaxed clipping; ``apply_base(batch)`` runs the frozen base
+    model. Only ``clip_params`` receive gradients; loss is Eq. 3:
+    ``MSE(clip, base) - alpha * mean(mask)``. Plain SGD, matching the paper's
+    "lightweight adaptation" framing. Returns (learned params, loss history).
+    """
+
+    def loss_fn(cp, batch, y_base):
+        y, mask_mean = apply_clip(cp, batch)
+        mse = jnp.mean((y - y_base) ** 2)
+        return mse - alpha * mask_mean, (mse, mask_mean)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+    history = []
+    for _ in range(epochs):
+        for batch in dataset:
+            y_base = apply_base(batch)
+            (loss, (mse, mask_mean)), g = grad_fn(clip_params, batch, y_base)
+            clip_params = jax.tree_util.tree_map(
+                lambda p, gg: p - lr * gg, clip_params, g
+            )
+            # keep bounds on the correct side of the MSB4==0 range
+            clip_params = {
+                "l": jnp.minimum(clip_params["l"], float(LP_LOW)),
+                "h": jnp.maximum(clip_params["h"], float(LP_HIGH)),
+            }
+            history.append(
+                {"loss": float(loss), "mse": float(mse), "mask": float(mask_mean)}
+            )
+    return clip_params, history
+
+
+def enhanced_sparsity(
+    x_int8: jax.Array, col_mask: jax.Array, l: int, h: int
+) -> Tuple[jax.Array, jax.Array]:
+    """(natural sparsity, post-clipping sparsity) for an activation tensor."""
+    nat = subprecision_sparsity(x_int8)
+    clipped = apply_clipping(x_int8, col_mask, l, h)
+    return nat, subprecision_sparsity(clipped)

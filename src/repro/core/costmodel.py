@@ -1,0 +1,306 @@
+"""Analytical energy/latency cost model of the SPARQLe accelerator (paper §4).
+
+Faithful in *structure* to the paper's methodology:
+
+  * iso-MAC comparison: 256 PEs, Int4xInt4 MACs, 2048 MACs/cycle for both the
+    dense baseline and the SPARQLe hybrid accelerator (Table 1);
+  * Int8 x Int4 = 2 compute rounds on Int4 MACs, Int8xInt8 = 4, Int4xInt4 /
+    Int4xInt2 = 1 (paper §3.3 "compute rounds");
+  * SPARQLe executes dense LSB4 pass (1 round) + sparse MSB4 pass
+    ((1 - s) rounds, PBM-gated), sequentially on the shared MACs;
+  * tiled output-stationary dataflow with load-compute-drain overlap
+    (Fig. 5): per-layer latency = max(load, compute, drain) + pipeline fill;
+  * activation traffic in SPARQLe format: 0.5 B (LSB4) + 1/8 B (PBM) +
+    (1 - s) * 0.5 B (compressed MSB4) per element (Eq. 1); outputs drained
+    already re-encoded (drain-path splitters + sparse encoder);
+  * activation-activation ops (QK^T, softmax*V) and KV-cache traffic are
+    modeled but NOT accelerated by SPARQLe (paper §5.1);
+  * DRAM energy/latency excluded (paper §4); SRAM-level traffic only;
+  * SPARQLe control overhead: +7 % power, +5.5 % area (paper §5.2).
+
+The paper leaves several constants unspecified (SRAM-level tile reuse
+factors, decode batch, per-op energies). These are explicit knobs on
+:class:`HardwareConfig`; ``benchmarks/bench_costmodel.py --calibrate``
+searches them to fit the paper's 12 reported improvement numbers and the
+committed defaults are the best fit (see EXPERIMENTS.md §Cost-model).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class HardwareConfig:
+    """Table 1 + inferred dataflow/energy knobs (7nm estimates)."""
+
+    n_pes: int = 256
+    macs_per_cycle: int = 2048           # Int4xInt4 MACs
+    freq_ghz: float = 1.0
+    sram_bytes: int = int(1.5 * 2**20)
+    load_bw: float = 32.0                # B/cycle SRAM -> circular buffers
+    drain_bw: float = 32.0               # B/cycle write-combine -> SRAM
+    # SRAM-level tile reuse (inferred; fit by bench_costmodel --calibrate
+    # against the paper's 12 reported improvements, RMSE 4.2pp):
+    tile_m: int = 128                    # act rows resident -> weight reuse M/tile_m
+    tile_n: int = 128                    # out cols resident -> act reuse N/tile_n
+    # 7nm energy constants (pJ):
+    e_mac_int4: float = 0.08             # per Int4xInt4 MAC
+    e_sram_byte: float = 1.3             # per byte SRAM<->buffers
+    e_rf_byte: float = 0.08              # per byte buffer<->RF
+    leak_pj_per_cycle: float = 400.0     # array leakage+clock (calibrated)
+    # SPARQLe overheads (paper §5.2):
+    sparqle_power_ovh: float = 1.07
+    sparqle_area_ovh: float = 1.055
+    pipeline_fill_cycles: int = 64
+
+
+@dataclasses.dataclass
+class LinearShape:
+    """One matmul A(M,K) @ W(K,N); ``s`` = MSB4 sparsity of its input acts."""
+
+    name: str
+    m: int
+    k: int
+    n: int
+    w_bits: int = 4
+    s: float = 0.0                      # sub-precision sparsity of input acts
+    sparqle_eligible: bool = True       # False for act x act (QK^T, PV)
+    a_bits: int = 8                     # activation operand width
+    count: int = 1                      # how many identical instances
+
+
+@dataclasses.dataclass
+class PhaseCost:
+    cycles: float
+    energy_pj: float
+    load_bytes: float
+    compute_macs: float
+    drain_bytes: float
+
+    @property
+    def latency_us(self):
+        return self.cycles / 1e3  # at 1 GHz, cycles -> ns; /1e3 -> us
+
+    def __add__(self, o: "PhaseCost") -> "PhaseCost":
+        return PhaseCost(
+            self.cycles + o.cycles,
+            self.energy_pj + o.energy_pj,
+            self.load_bytes + o.load_bytes,
+            self.compute_macs + o.compute_macs,
+            self.drain_bytes + o.drain_bytes,
+        )
+
+
+ZERO = PhaseCost(0.0, 0.0, 0.0, 0.0, 0.0)
+
+
+def _act_bytes_per_elem(sparqle: bool, s: float, a_bits: int) -> float:
+    if not sparqle:
+        return a_bits / 8.0
+    half = a_bits / 16.0               # p/2 bits -> bytes
+    return half + 1.0 / 8.0 + (1.0 - s) * half  # LSB + PBM + compressed MSB
+
+
+def linear_cost(
+    shape: LinearShape, hw: HardwareConfig, sparqle: bool
+) -> PhaseCost:
+    """Cost of one tiled linear layer execution (one of ``count``)."""
+    m, k, n = shape.m, shape.k, shape.n
+    macs = m * k * n
+    use_sparqle = sparqle and shape.sparqle_eligible and shape.a_bits == 8
+
+    # ---- compute rounds on Int4 MACs (paper §3.3) ----
+    base_rounds = max(1, shape.a_bits // 4)  # int8 ops take 2 rounds
+    if use_sparqle:
+        rounds = 1.0 + (1.0 - shape.s)       # dense LSB4 + sparse MSB4
+    else:
+        rounds = float(base_rounds)
+    compute_cycles = rounds * macs / hw.macs_per_cycle
+
+    # ---- SRAM-level traffic with tiled reuse ----
+    n_reload = max(1.0, n / hw.tile_n)       # act reloads across N tiles
+    m_reload = max(1.0, m / hw.tile_m)       # weight reloads across M tiles
+    a_bpe = _act_bytes_per_elem(use_sparqle, shape.s, shape.a_bits)
+    act_bytes = m * k * n_reload * a_bpe
+    w_bytes = k * n * m_reload * (shape.w_bits / 8.0)
+    load_bytes = act_bytes + w_bytes
+    # outputs drained re-encoded (SPARQLe) or int8 (baseline)
+    out_bpe = _act_bytes_per_elem(use_sparqle, shape.s, 8)
+    drain_bytes = m * n * out_bpe
+
+    load_cycles = load_bytes / hw.load_bw
+    drain_cycles = drain_bytes / hw.drain_bw
+    cycles = max(load_cycles, compute_cycles, drain_cycles) + hw.pipeline_fill_cycles
+
+    # ---- energy ----
+    mac_energy = rounds * macs * hw.e_mac_int4
+    sram_energy = (load_bytes + drain_bytes) * hw.e_sram_byte
+    rf_energy = rounds * macs * 2 * hw.e_rf_byte * 0.5  # two nibble operands/MAC
+    energy = mac_energy + sram_energy + rf_energy + cycles * hw.leak_pj_per_cycle
+    if use_sparqle:
+        energy *= hw.sparqle_power_ovh  # sparsity-logic power overhead
+
+    return PhaseCost(cycles, energy, load_bytes, macs * rounds, drain_bytes)
+
+
+def phase_cost(
+    layers: List[LinearShape], hw: HardwareConfig, sparqle: bool
+) -> PhaseCost:
+    """Sequential multi-layer execution (paper §4: 'modeled as sequential')."""
+    total = ZERO
+    for l in layers:
+        c = linear_cost(l, hw, sparqle)
+        total = total + PhaseCost(
+            c.cycles * l.count, c.energy_pj * l.count,
+            c.load_bytes * l.count, c.compute_macs * l.count,
+            c.drain_bytes * l.count,
+        )
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Model descriptions: per-layer linear lists for the paper's three models
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LMShape:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    w_bits: int = 4
+    gated_mlp: bool = True               # SwiGLU: gate+up+down
+
+
+PAPER_MODELS: Dict[str, LMShape] = {
+    # BitNet b1.58 3B (paper [15]): 26L, d=3200, ff=8640, W2A8KV4
+    "bitnet-3b": LMShape("bitnet-3b", 26, 3200, 32, 32, 8640, 32002, w_bits=2),
+    # Llama2-7B (QServe W4A8KV4)
+    "llama2-7b": LMShape("llama2-7b", 32, 4096, 32, 32, 11008, 32000, w_bits=4),
+    # Llama3-8B (QServe W4A8KV4)
+    "llama3-8b": LMShape("llama3-8b", 32, 4096, 32, 8, 14336, 128256, w_bits=4),
+}
+
+
+def lm_linear_layers(
+    model: LMShape,
+    m_tokens: int,
+    s_linear: float,
+    *,
+    seq_for_attn: int,
+    decode: bool,
+    per_layer_s: Optional[List[Dict[str, float]]] = None,
+) -> List[LinearShape]:
+    """Expand an LM into its per-decoder-block linears + act-act attention ops.
+
+    ``m_tokens``: rows of every linear (prefill: seq*batch; decode: batch).
+    ``seq_for_attn``: KV length for the attention score/value ops.
+    ``per_layer_s``: optional per-layer, per-projection sparsity overrides
+    (keys: q/k/v/o/gate/up/down), used for the Fig. 8 layerwise benchmark.
+    """
+    d, h, kvh = model.d_model, model.n_heads, model.n_kv_heads
+    hd = d // h
+    layers: List[LinearShape] = []
+    for li in range(model.n_layers):
+        sl = (per_layer_s[li] if per_layer_s is not None else {})
+        g = lambda key: sl.get(key, s_linear)  # noqa: E731
+        layers += [
+            LinearShape(f"L{li}.q_proj", m_tokens, d, d, model.w_bits, g("q")),
+            LinearShape(f"L{li}.k_proj", m_tokens, d, kvh * hd, model.w_bits, g("k")),
+            LinearShape(f"L{li}.v_proj", m_tokens, d, kvh * hd, model.w_bits, g("v")),
+            LinearShape(f"L{li}.o_proj", m_tokens, d, d, model.w_bits, g("o")),
+            LinearShape(f"L{li}.gate_proj", m_tokens, d, model.d_ff, model.w_bits, g("gate")),
+            LinearShape(f"L{li}.up_proj", m_tokens, d, model.d_ff, model.w_bits, g("up")),
+            LinearShape(f"L{li}.down_proj", m_tokens, model.d_ff, d, model.w_bits, g("down")),
+        ]
+        # act x act attention ops: QK^T and P·V, with int4 KV cache (KV4).
+        # Not SPARQLe-eligible (paper §5.1). Weights here *are* the KV cache.
+        layers += [
+            LinearShape(f"L{li}.qkT", m_tokens * h, hd, seq_for_attn,
+                        w_bits=4, s=0.0, sparqle_eligible=False),
+            LinearShape(f"L{li}.pv", m_tokens * h, seq_for_attn, hd,
+                        w_bits=4, s=0.0, sparqle_eligible=False),
+        ]
+    layers.append(
+        LinearShape("lm_head", m_tokens, d, model.vocab, model.w_bits, s_linear)
+    )
+    return layers
+
+
+@dataclasses.dataclass
+class InferenceReport:
+    model: str
+    prefill_base: PhaseCost
+    prefill_sparqle: PhaseCost
+    decode_base: PhaseCost
+    decode_sparqle: PhaseCost
+
+    def improvements(self) -> Dict[str, float]:
+        pct = lambda b, s: (1.0 - s / b) * 100.0  # noqa: E731
+        return {
+            "ttft_latency_pct": pct(self.prefill_base.cycles, self.prefill_sparqle.cycles),
+            "tpot_latency_pct": pct(self.decode_base.cycles, self.decode_sparqle.cycles),
+            "prefill_energy_pct": pct(self.prefill_base.energy_pj, self.prefill_sparqle.energy_pj),
+            "decode_energy_pct": pct(self.decode_base.energy_pj, self.decode_sparqle.energy_pj),
+            "prefill_transfer_pct": pct(
+                self.prefill_base.load_bytes + self.prefill_base.drain_bytes,
+                self.prefill_sparqle.load_bytes + self.prefill_sparqle.drain_bytes),
+            "decode_transfer_pct": pct(
+                self.decode_base.load_bytes + self.decode_base.drain_bytes,
+                self.decode_sparqle.load_bytes + self.decode_sparqle.drain_bytes),
+            "prefill_compute_pct": pct(self.prefill_base.compute_macs,
+                                       self.prefill_sparqle.compute_macs),
+            "decode_compute_pct": pct(self.decode_base.compute_macs,
+                                      self.decode_sparqle.compute_macs),
+        }
+
+
+def evaluate_model(
+    model: LMShape,
+    s_linear: float,
+    hw: Optional[HardwareConfig] = None,
+    *,
+    prefill_tokens: int = 2048,
+    decode_batch: int = 16,
+    decode_kv_len: int = 2048,
+    per_layer_s: Optional[List[Dict[str, float]]] = None,
+) -> InferenceReport:
+    """TTFT/TPOT + energy for baseline dense accel vs SPARQLe accel."""
+    hw = hw or HardwareConfig()
+    prefill = lm_linear_layers(model, prefill_tokens, s_linear,
+                               seq_for_attn=prefill_tokens, decode=False,
+                               per_layer_s=per_layer_s)
+    decode = lm_linear_layers(model, decode_batch, s_linear,
+                              seq_for_attn=decode_kv_len, decode=True,
+                              per_layer_s=per_layer_s)
+    return InferenceReport(
+        model=model.name,
+        prefill_base=phase_cost(prefill, hw, sparqle=False),
+        prefill_sparqle=phase_cost(prefill, hw, sparqle=True),
+        decode_base=phase_cost(decode, hw, sparqle=False),
+        decode_sparqle=phase_cost(decode, hw, sparqle=True),
+    )
+
+
+def area_power_overhead(hw: Optional[HardwareConfig] = None) -> Dict[str, float]:
+    """§5.2 accounting: overheads of the hybrid PE vs iso-MAC dense baseline."""
+    hw = hw or HardwareConfig()
+    return {
+        "area_overhead_pct": (hw.sparqle_area_ovh - 1.0) * 100.0,
+        "power_overhead_pct": (hw.sparqle_power_ovh - 1.0) * 100.0,
+    }
+
+
+# Paper-reported operating points (§5.1), used by calibration & validation.
+PAPER_SPARSITY = {"bitnet-3b": 0.618, "llama2-7b": 0.470, "llama3-8b": 0.444}
+PAPER_CLAIMS = {
+    # model: (ttft%, tpot%, prefill_E%, decode_E%)
+    "bitnet-3b": (24.3, 23.4, 26.7, 14.2),
+    "llama2-7b": (17.2, 14.6, 18.4, 7.1),
+    "llama3-8b": (16.0, 13.5, 17.0, 6.5),
+}

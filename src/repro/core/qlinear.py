@@ -1,0 +1,290 @@
+"""SPARQLe quantized linear — the paper's technique as a drop-in layer.
+
+``SparqleLinear`` bundles everything a deployed SPARQLe linear needs:
+the int4/int2 quantized weight, the precomputed column-importance mask
+(paper §3.2 — offline, zero runtime overhead) and the calibrated clipping
+constants.  ``linear()`` is the single projection entry point used by every
+model family: it dispatches transparently between
+
+  * plain float weights                  (training / float serving),
+  * ``SparqleLinear`` in ``sparqle`` mode (dual-pass sub-precision execution),
+  * ``SparqleLinear`` in ``dense`` mode   (the paper's W4A8 dense baseline).
+
+``quantize_model_params`` converts a float param tree into its served form
+by rewriting projection leaves in place — models need no code changes to
+run quantized (the "complementary to quantization" contribution of §1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.clipping import apply_clipping, importance_mask_tile_aligned
+from repro.core.quantize import (QuantizedTensor, quantize_activations,
+                                 quantize_weights)
+from repro.core.sparqle import encode
+
+
+def pack_int4(q: jax.Array, axis: int = -2) -> jax.Array:
+    """Pack two's-complement int4 values two-per-byte along ``axis``.
+
+    The sub-byte wire format the paper's representation implies, applied
+    to the static weights: halves the weight HBM stream (the dominant
+    decode bytes after the KV cache).
+    """
+    assert q.shape[axis] % 2 == 0, q.shape
+    lo = jnp.take(q, jnp.arange(0, q.shape[axis], 2), axis=axis)
+    hi = jnp.take(q, jnp.arange(1, q.shape[axis], 2), axis=axis)
+    return jnp.bitwise_or(
+        jnp.bitwise_and(lo, 0xF),
+        jnp.left_shift(jnp.bitwise_and(hi, 0xF), 4)).astype(jnp.int8)
+
+
+def unpack_int4(q: jax.Array, axis: int = -2) -> jax.Array:
+    """Inverse of :func:`pack_int4` (sign-extending)."""
+    lo = jnp.right_shift(jnp.left_shift(q, 4), 4)
+    hi = jnp.right_shift(q, 4)
+    stacked = jnp.stack([lo, hi], axis=axis + 1 if axis >= 0
+                        else q.ndim + axis + 1)
+    shape = list(q.shape)
+    shape[axis] = shape[axis] * 2
+    return stacked.reshape(shape)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SparqleLinear:
+    """A quantized projection in SPARQLe served form.
+
+    ``w.q`` is (K, N) or batched (E, K, N) for expert weights — stored
+    nibble-PACKED along K ((K/2, N)) when ``packed``. ``col_mask`` marks
+    the k% least-important activation columns (per expert for batched
+    weights); ``l``/``h`` are the calibrated clipping constants.
+    Aux (untraced): ``mode`` ('sparqle' | 'dense'), ``packed``.
+    """
+
+    w: QuantizedTensor
+    col_mask: Optional[jax.Array]   # (K,) or (E, K) bool; None = no clipping
+    l: Optional[jax.Array]          # scalar f32 (integer-domain)
+    h: Optional[jax.Array]
+    mode: str = "sparqle"
+    packed: bool = False
+
+    def tree_flatten(self):
+        return (self.w, self.col_mask, self.l, self.h), (self.mode,
+                                                         self.packed)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        mode, packed = aux if isinstance(aux, tuple) else (aux, False)
+        return cls(*children, mode=mode, packed=packed)
+
+    def unpacked_q(self) -> jax.Array:
+        q = self.w.q.astype(jnp.int8)
+        return unpack_int4(q) if self.packed else q
+
+    def dequantize(self) -> jax.Array:
+        return self.unpacked_q().astype(jnp.float32) * self.w.scale \
+            + self.w.zero
+
+    @property
+    def shape(self):
+        s = list(self.w.q.shape)
+        if self.packed:
+            s[-2] *= 2
+        return tuple(s)
+
+
+def _dual_pass_matmul(q: jax.Array, wq: jax.Array, batched: bool) -> jax.Array:
+    """int8 SPARQLe activations x int-weights -> int32, dual nibble passes."""
+    act = encode(q)
+    if batched:   # (E, C, K) x (E, K, N)
+        dims = (((2,), (1,)), ((0,), (0,)))
+    else:         # (M, K) x (K, N)
+        dims = (((1,), (0,)), ((), ()))
+    dense = jax.lax.dot_general(act.lsb4, wq, dims,
+                                preferred_element_type=jnp.int32)
+    sparse = jax.lax.dot_general(act.msb4, wq, dims,
+                                 preferred_element_type=jnp.int32)
+    return dense + sparse * 16
+
+
+def _single_pass_matmul(q: jax.Array, wq: jax.Array, batched: bool) -> jax.Array:
+    dims = (((2,), (1,)), ((0,), (0,))) if batched else (((1,), (0,)), ((), ()))
+    return jax.lax.dot_general(q, wq, dims, preferred_element_type=jnp.int32)
+
+
+def linear(x: jax.Array, w, b: Optional[jax.Array] = None) -> jax.Array:
+    """Universal projection: x (..., K) @ w (K, N) [+ b].
+
+    ``w`` may be a float array, a :class:`SparqleLinear`, or (batched expert
+    form) x (E, C, K) @ w (E, K, N).
+    """
+    if isinstance(w, SparqleLinear):
+        y = _quantized_apply(x, w)
+    else:
+        y = jax.lax.dot_general(
+            x, w.astype(x.dtype),
+            (((x.ndim - 1,), (0,)), ((), ())))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def expert_linear(x: jax.Array, w, ) -> jax.Array:
+    """Batched expert projection: x (E, C, K) @ w (E, K, N)."""
+    if isinstance(w, SparqleLinear):
+        return _quantized_apply(x, w, batched=True)
+    return jnp.einsum("eck,ekn->ecn", x, w.astype(x.dtype))
+
+
+def _quantized_apply(x: jax.Array, sl: SparqleLinear,
+                     batched: bool = False) -> jax.Array:
+    """quantize -> clip -> decompose -> dual-pass -> rescale."""
+    orig = x.shape
+    k_in = orig[-1]
+    if batched:
+        x2 = x                                 # (E, C, K)
+    else:
+        x2 = x.reshape(-1, k_in)               # (M, K)
+    qa = quantize_activations(x2, bits=8, per_token=True)
+    q = qa.q
+    if sl.col_mask is not None and sl.l is not None:
+        mask = sl.col_mask[:, None, :] if batched else sl.col_mask
+        q = apply_clipping(q, mask, sl.l, sl.h)
+    wq = sl.unpacked_q()
+    if sl.mode == "sparqle":
+        acc = _dual_pass_matmul(q, wq, batched)
+    else:
+        acc = _single_pass_matmul(q, wq, batched)
+    w_scale = sl.w.scale  # (1, N) or (E, 1, N) per-output-channel
+    out = acc.astype(jnp.float32) * qa.scale.astype(jnp.float32) \
+        * w_scale.reshape((wq.shape[0], 1, -1) if batched else (1, -1))
+    if batched:
+        return out.astype(x.dtype)
+    return out.reshape(*orig[:-1], wq.shape[-1]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Offline conversion: float param tree -> SPARQLe served tree
+# ---------------------------------------------------------------------------
+
+# param-leaf name patterns eligible for quantization (projection weights);
+# norms / embeddings / biases / ssm scalars stay float.
+_QUANT_LEAF = re.compile(
+    r"(wq|wk|wv|wo|w_gate|w_up|w_down|w_fc|w_proj|w_in|w_out|"
+    r"wq_a|wq_b|wkv_a|wkv_b|lm_head|w_shared_gate|w_shared_up|w_shared_down)$")
+
+
+def is_quantizable(path: str, leaf) -> bool:
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    name = path.rsplit("/", 1)[-1]
+    return bool(_QUANT_LEAF.search(name))
+
+
+def quantize_leaf(
+    leaf: jax.Array,
+    *,
+    w_bits: int = 4,
+    k_percent: float = 50.0,
+    clip_l: float = -8.0,
+    clip_h: float = 23.0,
+    mode: str = "sparqle",
+    tile_k: int = 128,
+    enable_clipping: bool = True,
+    pack: bool = True,
+) -> SparqleLinear:
+    """Quantize one (K, N) or (E, K, N) projection into served form.
+
+    ``pack`` nibble-packs the int4 payload two-per-byte along K (halving
+    the stored/streamed weight bytes); disabled automatically for odd K
+    or w_bits > 4.
+    """
+    if leaf.ndim == 2:
+        wq = quantize_weights(leaf, bits=w_bits, axis=0)
+        mask = (importance_mask_tile_aligned(leaf, k_percent, tile_k)
+                if enable_clipping else None)
+    elif leaf.ndim == 3:
+        wq = quantize_weights(leaf, bits=w_bits, axis=1)
+        if enable_clipping:
+            mask = jnp.stack([
+                importance_mask_tile_aligned(leaf[e], k_percent, tile_k)
+                for e in range(leaf.shape[0])])
+        else:
+            mask = None
+    else:
+        raise ValueError(f"unsupported weight rank {leaf.ndim}")
+    do_pack = pack and w_bits <= 4 and wq.q.shape[-2] % 2 == 0
+    if do_pack:
+        wq = QuantizedTensor(q=pack_int4(wq.q), scale=wq.scale,
+                             zero=wq.zero, bits=wq.bits)
+    return SparqleLinear(
+        w=wq,
+        col_mask=mask,
+        l=jnp.float32(clip_l) if enable_clipping else None,
+        h=jnp.float32(clip_h) if enable_clipping else None,
+        mode=mode,
+        packed=do_pack,
+    )
+
+
+def quantize_model_params(
+    params: Dict[str, Any],
+    *,
+    w_bits: int = 4,
+    k_percent: float = 50.0,
+    clip_l: float = -8.0,
+    clip_h: float = 23.0,
+    mode: str = "sparqle",
+    enable_clipping: bool = True,
+    per_layer_lh: Optional[Dict[str, tuple]] = None,
+    tile_k: int = 128,
+) -> Dict[str, Any]:
+    """Rewrite every projection leaf of a param tree into SPARQLe form.
+
+    ``per_layer_lh`` optionally maps path prefixes to (l, h) pairs (the
+    Algorithm-1 layerwise constants); unmatched paths use the global pair.
+    """
+
+    def walk(tree, prefix=""):
+        out = {}
+        for k, v in tree.items():
+            path = f"{prefix}/{k}" if prefix else k
+            if isinstance(v, dict):
+                out[k] = walk(v, path)
+            elif is_quantizable(path, v):
+                l, h = clip_l, clip_h
+                if per_layer_lh:
+                    for pref, (pl_, ph_) in per_layer_lh.items():
+                        if path.startswith(pref):
+                            l, h = pl_, ph_
+                            break
+                q1 = lambda w: quantize_leaf(  # noqa: E731
+                    w, w_bits=w_bits, k_percent=k_percent, clip_l=l,
+                    clip_h=h, mode=mode, enable_clipping=enable_clipping,
+                    tile_k=tile_k)
+                # routed-expert weights are (E,K,N)-batched; shared-expert
+                # weights (w_shared_*) are plain 2D despite living in moe/
+                is_expert = (("/moe/" in path or path.startswith("moe/"))
+                             and "shared" not in k)
+                # leaf ranks: 2 = plain (K,N); 3 = experts (E,K,N) when under
+                # a moe/ subtree else layer-stacked (L,K,N); 4 = layer-stacked
+                # experts (L,E,K,N).
+                if v.ndim == 2 or (v.ndim == 3 and is_expert):
+                    out[k] = q1(v)
+                elif v.ndim in (3, 4):
+                    sls = [q1(v[i]) for i in range(v.shape[0])]
+                    out[k] = jax.tree_util.tree_map(
+                        lambda *xs: jnp.stack(xs), *sls)
+                else:
+                    raise ValueError(f"{path}: rank {v.ndim}")
+            else:
+                out[k] = v
+        return out
+
+    return walk(params)

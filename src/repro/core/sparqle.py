@@ -1,0 +1,128 @@
+"""SPARQLe activation codec (paper §3.1).
+
+Decomposes an int8 activation tensor into the three structured components of
+the SPARQLe representation:
+
+  * ``lsb4`` — dense tensor of the low 4 bits of every element (values 0..15,
+    carried in an int8 container; a real TPU deployment packs two per byte),
+  * ``pbm``  — precision bitmap, ``True`` where the element's MSB4 is nonzero,
+  * ``msb4`` — the arithmetic high nibble (values -8..7, int8 container).
+
+Numerical identity (two's complement):  ``x == (x >> 4) * 16 + (x & 0xF)``.
+
+``msb4`` is kept *dense but mostly-zero* on the JAX side — compression is a
+storage-format concern; the kernel (kernels/sparqle_matmul.py) consumes the
+dense nibble planes plus per-tile population counts, and the analytical cost
+model (core/costmodel.py) accounts for the compressed wire format
+(Eq. 1: compression% = (4s-1)/8 * 100 for p=8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# MSB4==0 range for two's-complement int8 (paper §3.2): [lp_l, lp_h].
+LP_LOW = 0
+LP_HIGH = 15
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SparqleActivation:
+    """A SPARQLe-decomposed int8 activation tensor.
+
+    All planes share the logical shape of the source tensor. ``scale`` is the
+    activation quantization scale that maps int8 back to real values (kept
+    with the payload so downstream matmuls can rescale outputs).
+    """
+
+    lsb4: jax.Array  # int8 container, values in [0, 15]
+    msb4: jax.Array  # int8 container, values in [-8, 7], zero where pbm==0
+    pbm: jax.Array   # bool
+    scale: jax.Array  # f32, per-token or per-tensor activation scale
+
+    def tree_flatten(self):
+        return (self.lsb4, self.msb4, self.pbm, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    @property
+    def shape(self):
+        return self.lsb4.shape
+
+
+def encode(x_int8: jax.Array, scale: jax.Array | float = 1.0) -> SparqleActivation:
+    """int8 tensor -> (LSB4, MSB4, PBM). Exact for all int8 inputs."""
+    x = x_int8.astype(jnp.int8)
+    msb4 = jnp.right_shift(x, 4)          # arithmetic shift: sign-extends
+    lsb4 = jnp.bitwise_and(x, 0xF)        # low nibble, 0..15
+    pbm = msb4 != 0
+    return SparqleActivation(
+        lsb4=lsb4.astype(jnp.int8),
+        msb4=msb4.astype(jnp.int8),
+        pbm=pbm,
+        scale=jnp.asarray(scale, jnp.float32),
+    )
+
+
+def decode(a: SparqleActivation) -> jax.Array:
+    """(LSB4, MSB4, PBM) -> int8 tensor. Inverse of :func:`encode`."""
+    x = a.msb4.astype(jnp.int32) * 16 + a.lsb4.astype(jnp.int32)
+    return x.astype(jnp.int8)
+
+
+def subprecision_sparsity(x_int8: jax.Array) -> jax.Array:
+    """Fraction ``s`` of elements whose MSB4 is zero (i.e. value in [0, 15])."""
+    msb4 = jnp.right_shift(x_int8.astype(jnp.int8), 4)
+    return jnp.mean((msb4 == 0).astype(jnp.float32))
+
+
+def compression_percent(s: jax.Array | float, p: int = 8) -> jax.Array:
+    """Paper Eq. 1. Storage saved vs a dense p-bit tensor.
+
+    dense p bits/elem vs (p/2 LSB bits + 1 PBM bit + (1-s)*p/2 MSB bits).
+    For p=8 this evaluates to (4s-1)/8 * 100.
+    """
+    s = jnp.asarray(s, jnp.float32)
+    kept = p / 2 + 1 + (1 - s) * p / 2
+    return (p - kept) / p * 100.0
+
+
+def ops_reduction_percent(s: jax.Array | float) -> jax.Array:
+    """Paper Eq. 2: fraction of int4-MAC work skipped by the sparse pass."""
+    return jnp.asarray(s, jnp.float32) / 2.0 * 100.0
+
+
+def encoded_bytes(shape: Tuple[int, ...], s: float, p: int = 8) -> float:
+    """Wire bytes of the compressed representation for an ``s``-sparse tensor."""
+    n = 1
+    for d in shape:
+        n *= d
+    bits = n * (p / 2 + 1 + (1 - s) * p / 2)
+    return bits / 8.0
+
+
+def tile_population(pbm: jax.Array, tile_m: int, tile_k: int) -> jax.Array:
+    """Per-(M-tile, K-tile) nonzero-MSB4 population counts.
+
+    This is the TPU-side co-design artifact (DESIGN.md §2): the Pallas kernel
+    predicates the sparse MSB4 pass per VMEM tile on ``population > 0``.
+    ``pbm`` is (M, K); returns int32 (M/tile_m, K/tile_k). Requires divisible
+    shapes (callers pad — kernels always operate on tile-aligned operands).
+    """
+    m, k = pbm.shape
+    assert m % tile_m == 0 and k % tile_k == 0, (pbm.shape, tile_m, tile_k)
+    t = pbm.reshape(m // tile_m, tile_m, k // tile_k, tile_k)
+    return t.sum(axis=(1, 3)).astype(jnp.int32)
+
+
+def tile_sparsity(pbm: jax.Array, tile_m: int, tile_k: int) -> jax.Array:
+    """Fraction of (tile_m x tile_k) MSB4 tiles that are entirely zero."""
+    pop = tile_population(pbm, tile_m, tile_k)
+    return jnp.mean((pop == 0).astype(jnp.float32))

@@ -1,0 +1,79 @@
+"""XLA-level SPARQLe dual-pass matmul (distribution-friendly reference path).
+
+This is the pure-JAX realization of the kernel's math — used (a) as the
+lowering path inside pjit'd serving graphs (Pallas interpret mode is
+CPU-debug only), and (b) as the numerical contract the Pallas kernel is
+tested against. It performs the same two passes the accelerator does:
+
+    acc  = lsb4 @ w                      (dense pass)
+    acc += 16 * (msb4 @ w)               (sparse pass, shift-accumulated)
+
+and rescales with the activation/weight quantization scales.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QuantizedTensor, quantize_activations
+from repro.core.sparqle import SparqleActivation, encode
+
+
+def sparqle_matmul_xla(
+    act: SparqleActivation,
+    w: QuantizedTensor,
+    *,
+    out_dtype=jnp.float32,
+    preferred_acc=jnp.int32,
+) -> jax.Array:
+    """(M, K) SPARQLe activations @ (K, N) quantized weights -> (M, N) real."""
+    lsb = act.lsb4.astype(jnp.int8)
+    msb = act.msb4.astype(jnp.int8)
+    wq = w.q.astype(jnp.int8)
+    dense = jax.lax.dot_general(
+        lsb, wq, (((lsb.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=preferred_acc)
+    sparse = jax.lax.dot_general(
+        msb, wq, (((msb.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=preferred_acc)
+    acc = dense + sparse * 16
+    out = acc.astype(jnp.float32) * act.scale * w.scale.reshape(1, -1)
+    if w.zero is not None:
+        # symmetric weights in this repo: zero == 0; kept for generality
+        out = out + (lsb.astype(jnp.float32) + 16 * msb.astype(jnp.float32)).sum(
+            axis=-1, keepdims=True) * 0.0
+    return out.astype(out_dtype)
+
+
+def quantized_linear_sparqle(
+    x: jax.Array,
+    w: QuantizedTensor,
+    *,
+    col_mask: Optional[jax.Array] = None,
+    clip_l: Optional[jax.Array] = None,
+    clip_h: Optional[jax.Array] = None,
+    zero_point: bool = False,
+) -> jax.Array:
+    """Full serving-path linear: quantize -> clip -> decompose -> dual-pass.
+
+    This is what a `QuantizedLinear` layer calls when SPARQLe is enabled.
+    Clipping (if configured) is the paper's §3.2 sparsity enhancement,
+    applied in the integer domain before decomposition.
+    """
+    from repro.core.clipping import apply_clipping  # local import, no cycle
+
+    orig_shape = x.shape
+    x2 = x.reshape(-1, orig_shape[-1])
+    qa = quantize_activations(x2, bits=8, per_token=True, zero_point=zero_point)
+    q = qa.q
+    if col_mask is not None and clip_l is not None:
+        q = apply_clipping(q, col_mask, clip_l, clip_h)
+    act = encode(q, qa.scale)
+    out = sparqle_matmul_xla(act, w)
+    if zero_point:
+        # x = q*scale + zero  =>  x@W = (q*scale)@W + zero * colsum(W)
+        w_colsum = (w.q.astype(jnp.float32) * w.scale).sum(axis=0)
+        out = out + qa.zero.reshape(-1, 1) * w_colsum.reshape(1, -1)
+    return out.reshape(*orig_shape[:-1], w.q.shape[-1])

@@ -1,0 +1,176 @@
+"""Fault tolerance: restartable step loop, straggler deadline, fault injection.
+
+Large fleets fail constantly; the framework's contract is that a failed or
+stuck *step* never loses more than the work since the last checkpoint:
+
+  * ``RestartableLoop`` wraps the train step. Any exception inside a step
+    (device error, injected fault, preemption signal) triggers restore from
+    the newest complete checkpoint and replay from that step. Because the
+    data pipeline is stateless-indexable (``batch_at(step)``), replay is
+    bit-identical.
+  * ``DeadlineMonitor`` is the straggler mitigation: a watchdog thread that
+    raises in the main thread if a step exceeds ``deadline_s`` (hung
+    collective / dead host). On real fleets the step deadline triggers the
+    same restore path after the runtime reslices the job; here it is
+    exercised in tests with ``FaultInjector``.
+  * ``FaultInjector`` deterministically fails chosen steps (or sleeps to
+    fake a straggler) so the recovery path is testable on one host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from repro.checkpoint import store
+
+
+class StepFault(RuntimeError):
+    """A step failed (injected or real)."""
+
+
+class StragglerTimeout(RuntimeError):
+    """A step exceeded its deadline."""
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Deterministic fault plan: {step: 'fail' | 'hang'}."""
+
+    plan: Dict[int, str] = dataclasses.field(default_factory=dict)
+    fired: Dict[int, str] = dataclasses.field(default_factory=dict)
+    hang_s: float = 0.5
+
+    def check(self, step: int) -> None:
+        action = self.plan.get(step)
+        if action and step not in self.fired:
+            self.fired[step] = action
+            if action == "fail":
+                raise StepFault(f"injected failure at step {step}")
+            if action == "hang":
+                time.sleep(self.hang_s)
+
+
+class DeadlineMonitor:
+    """Watchdog: mark step start/end; a step running past ``deadline_s``
+    flags a straggler, surfaced as StragglerTimeout at the next poll."""
+
+    def __init__(self, deadline_s: float):
+        self.deadline_s = deadline_s
+        self._start: Optional[float] = None
+        self._lock = threading.Lock()
+        self.tripped = False
+
+    def begin(self) -> None:
+        with self._lock:
+            self._start = time.monotonic()
+
+    def end(self) -> None:
+        with self._lock:
+            if (self._start is not None
+                    and time.monotonic() - self._start > self.deadline_s):
+                self.tripped = True
+            self._start = None
+
+    def raise_if_tripped(self) -> None:
+        if self.tripped:
+            self.tripped = False
+            raise StragglerTimeout(
+                f"step exceeded {self.deadline_s}s deadline")
+
+
+@dataclasses.dataclass
+class LoopReport:
+    steps_run: int = 0
+    restarts: int = 0
+    restores: int = 0
+    faults_seen: int = 0
+
+
+class RestartableLoop:
+    """Checkpoint-restore step loop.
+
+    ``step_fn(state, batch) -> (state, metrics)`` must be pure (jitted).
+    ``make_batch(step)`` must be a pure function of the step index.
+    """
+
+    def __init__(
+        self,
+        step_fn: Callable[[Any, Any], Any],
+        make_batch: Callable[[int], Any],
+        ckpt_dir: str,
+        *,
+        ckpt_every: int = 50,
+        max_restarts: int = 10,
+        deadline_s: float = 1e9,
+        injector: Optional[FaultInjector] = None,
+        async_ckpt: bool = False,
+        state_shardings: Optional[Any] = None,
+    ):
+        self.step_fn = step_fn
+        self.make_batch = make_batch
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.monitor = DeadlineMonitor(deadline_s)
+        self.injector = injector
+        self.writer = (store.AsyncWriter(ckpt_dir) if async_ckpt else None)
+        self.state_shardings = state_shardings
+        self.report = LoopReport()
+
+    def _save(self, state: Any, step: int) -> None:
+        if self.writer is not None:
+            self.writer.submit(state, step)
+        else:
+            store.save(self.ckpt_dir, state, step)
+
+    def _restore_latest(self, like: Any):
+        step = store.latest_step(self.ckpt_dir)
+        if step is None:
+            return None
+        state = store.restore(self.ckpt_dir, step, like,
+                              self.state_shardings)
+        self.report.restores += 1
+        return step, state
+
+    def run(self, state: Any, start_step: int, n_steps: int):
+        """Run ``n_steps`` with checkpoint/restart. Returns (state, metrics
+        of last step)."""
+        step = start_step
+        end = start_step + n_steps
+        metrics = None
+        restarts = 0
+        # initial checkpoint so a step-0 failure is recoverable
+        if store.latest_step(self.ckpt_dir) is None:
+            self._save(state, step)
+        while step < end:
+            try:
+                self.monitor.begin()
+                if self.injector is not None:
+                    self.injector.check(step)
+                batch = self.make_batch(step)
+                state, metrics = self.step_fn(state, batch)
+                self.monitor.end()
+                self.monitor.raise_if_tripped()
+                step += 1
+                self.report.steps_run += 1
+                if step % self.ckpt_every == 0:
+                    self._save(state, step)
+            except (StepFault, StragglerTimeout) as e:
+                self.report.faults_seen += 1
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise RuntimeError("restart budget exhausted") from e
+                restored = self._restore_latest(state)
+                if restored is None:
+                    raise
+                step, state = restored
+                self.report.restarts += 1
+        self._save(state, step)          # final checkpoint
+        if self.writer is not None:
+            self.writer.close()
+            self.writer = None
+        return state, metrics

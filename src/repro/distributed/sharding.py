@@ -1,0 +1,190 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Every parameter/activation dimension carries a *logical* axis name; a rule
+table maps logical names to mesh axes. ``spec_for`` checks divisibility of
+the actual dim size against the mesh axis size and degrades to replication
+when it doesn't divide (e.g. hubert's vocab=504 on a 16-way model axis),
+so one rule table serves all 13 architectures on the fixed production mesh.
+
+Logical axes used across the repo:
+
+  batch      — global batch            -> ("pod", "data")
+  seq        — sequence                -> None (sequence parallelism is a
+                                           perf-iteration knob, off by default)
+  embed      — d_model                 -> None for activations; "data" (FSDP)
+                                           for large params
+  heads      — attention q heads      -> "model"
+  kv_heads   — attention kv heads     -> "model"
+  mlp        — d_ff                   -> "model"
+  vocab      — vocabulary             -> "model"
+  experts    — MoE experts            -> "model"
+  capacity   — MoE capacity slots     -> "data"
+  layers     — stacked scan dim       -> None
+  fsdp       — explicit FSDP dim      -> "data"
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "kv_seq": ("data", "model"),     # KV-cache seq: claims whatever axes the
+                                     # batch dim left free (long-context /
+                                     # small-KV-head decode sharding)
+    "embed": ("data", "pod"),        # params: FSDP dim; activations: batch
+                                     # claims these axes first -> replicated
+    "heads": ("model",),
+    "heads_flat": ("model",),        # flattened H*hd projection dim
+    "kv_heads": ("model",),
+    "qk_dim": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "capacity": ("data",),
+    "layers": (),
+    "fsdp": ("data",),
+    "conv": (),
+    "state": (),
+    None: (),
+}
+
+
+class _MeshContext(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, Tuple[str, ...]] = dict(DEFAULT_RULES)
+
+
+_CTX = _MeshContext()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, rules: Optional[Dict] = None):
+    """Install an ambient mesh + rules; model code constrains against it."""
+    prev_mesh, prev_rules = _CTX.mesh, _CTX.rules
+    _CTX.mesh = mesh
+    if rules:
+        merged = dict(DEFAULT_RULES)
+        merged.update(rules)
+        _CTX.rules = merged
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _CTX.mesh, _CTX.rules = prev_mesh, prev_rules
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _axes_for(logical: Optional[str], dim: int, mesh: Mesh,
+              rules: Dict, used: set) -> Optional[Tuple[str, ...]]:
+    """Mesh axes for one dim, or None if not divisible / unmapped.
+
+    Axes already claimed by an earlier dim are filtered out (not fatal), so
+    e.g. a KV cache rule ("data", "model") degrades to ("model",) when the
+    batch dim already took "data". Divisibility falls back over prefixes.
+    """
+    names = rules.get(logical, ())
+    names = tuple(n for n in names if n in mesh.shape and n not in used)
+    for cut in range(len(names), 0, -1):
+        sub = names[:cut]
+        t = 1
+        for n in sub:
+            t *= mesh.shape[n]
+        if dim % t == 0 and t > 1:
+            return sub
+    return None
+
+
+def spec_for(logical_axes: Sequence[Optional[str]], shape: Sequence[int],
+             mesh: Optional[Mesh] = None,
+             rules: Optional[Dict] = None) -> P:
+    """Build a PartitionSpec for ``shape`` from logical axis names.
+
+    Divisibility-checked per dim; mesh axes are never used twice (first dim
+    that claims an axis wins — matches rule-table priority order).
+    """
+    mesh = mesh or active_mesh()
+    rules = rules or _CTX.rules
+    if mesh is None:
+        return P()
+    used: set = set()
+    entries = []
+    for logical, dim in zip(logical_axes, shape):
+        axes = _axes_for(logical, dim, mesh, rules, used)
+        if axes:
+            used.update(axes)
+            entries.append(axes if len(axes) > 1 else axes[0])
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint against the ambient mesh (no-op without one)."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    spec = spec_for(logical_axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(logical_axes: Sequence[Optional[str]],
+                   shape: Sequence[int],
+                   mesh: Optional[Mesh] = None) -> NamedSharding:
+    mesh = mesh or active_mesh()
+    assert mesh is not None, "named_sharding requires a mesh"
+    return NamedSharding(mesh, spec_for(logical_axes, shape, mesh))
+
+
+# ---------------------------------------------------------------------------
+# sharding profiles (§Perf iterations)
+# ---------------------------------------------------------------------------
+
+def profile_rules(profile: str, cfg, kind: str, mesh: Mesh,
+                  global_batch: int = 0) -> Dict:
+    """Rule overrides per performance profile.
+
+    ``baseline`` — the paper-faithful first build: FSDP everywhere (params
+    shard their non-model dim over data/pod), which is what EXPERIMENTS.md
+    §Roofline baselines record.
+
+    ``tuned`` — §Perf iteration 1: drop FSDP (replicate params over the
+    data axes) whenever the per-device resident state fits comfortably,
+    eliminating the dominant per-layer/per-microbatch parameter
+    all-gathers. Training keeps f32 master + 2 bf16 moments resident
+    (8 B/param over the model axis); serving keeps int8 weights + scales
+    (~1.2 B/param).
+    """
+    if profile == "baseline":
+        return {}
+    data_ways = 1
+    for a in ("pod", "data"):
+        data_ways *= mesh.shape.get(a, 1)
+    # degenerate-batch decode (e.g. long_500k, B=1): per-step work is one
+    # token — replicating weights inflates the per-device stream for no
+    # collective win; keep them FSDP-sharded.
+    if kind == "decode" and 0 < global_batch < data_ways:
+        return {}
+    from repro.models.schema import param_count
+    from repro.models.schema_builder import build_schema
+    n = param_count(build_schema(cfg))
+    model_ways = mesh.shape.get("model", 1)
+    if kind == "train":
+        resident = n * 8.0 / model_ways
+    else:
+        resident = n * 1.2 / model_ways
+    if resident < 8e9:
+        return {"embed": ()}          # no FSDP: params replicate over data
+    return {}

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the SPARQLe compute hot-spots.
+
+  * sparqle_matmul   — dual-pass (LSB4 dense + PBM-gated MSB4) W4A8 matmul
+  * quant_matmul     — dense int8 x int4 baseline (the paper's baseline
+                       accelerator, iso-tiling)
+  * sparqle_encode   — fused drain-path output quantize + decompose
+  * kv_attention     — decode attention with in-VMEM unpack/dequant of the
+                       packed-int4 KV cache (flash-decoding structure)
+
+Each kernel ships with a pure-jnp oracle in ref.py and interpret-mode
+allclose sweeps in tests/test_kernels.py; ops.py holds the jit'd public
+wrappers (padding, backend dispatch).
+"""

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: fused decode attention over a packed-KV4 cache.
+
+The serving hot loop after the §Perf tuning is decode attention streaming
+the quantized KV cache (EXPERIMENTS.md Cell A: memory-bound at the
+weights+cache stream). This kernel keeps the cache in its wire format end
+to end: int4 nibbles packed two-per-byte are DMA'd into VMEM, unpacked and
+dequantized in-register, and consumed by a blockwise online-softmax
+attention — the cache never exists in HBM at bf16 width, which is what
+halves the dominant decode stream (the XLA path materializes the
+dequantized cache between ops unless fusion cooperates; the kernel makes
+the fusion structural).
+
+Layout: one grid step handles one (batch, kv-head) pair and one cache
+block of ``bs`` tokens (innermost, 'arbitrary'): running max/denominator
+and the (G, hd) output accumulator live in VMEM scratch across the cache
+scan — the standard flash-decoding structure re-tiled for VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _unpack4(q):  # int8 packed nibbles -> two sign-extended int8 planes
+    lo = jnp.right_shift(jnp.left_shift(q, 4), 4)
+    hi = jnp.right_shift(q, 4)
+    return lo, hi
+
+
+def _kernel(pos_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, out_ref,
+            m_ref, l_ref, acc_ref, *, n_s: int, bs: int, scale: float):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
+    # unpack + dequantize this cache block in VMEM
+    kq = kq_ref[0, :, 0, :]                              # (bs, hd//2) int8
+    ks = ks_ref[0, :, 0]                                 # (bs,)
+    lo, hi = _unpack4(kq)
+    k_int = jnp.stack([lo, hi], axis=-1).reshape(bs, -1)  # (bs, hd)
+    k = k_int.astype(jnp.float32) * ks[:, None]
+    vq = vq_ref[0, :, 0, :]
+    vs = vs_ref[0, :, 0]
+    lo_v, hi_v = _unpack4(vq)
+    v_int = jnp.stack([lo_v, hi_v], axis=-1).reshape(bs, -1)
+    v = v_int.astype(jnp.float32) * vs[:, None]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # causal validity: absolute cache position <= pos[b]
+    pos = pos_ref[0]
+    j = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    s = jnp.where(j <= pos, s, NEG_INF)                  # (G, bs)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _drain():
+        out_ref[0, 0] = (acc_ref[...] /
+                         jnp.maximum(l_ref[...], 1e-30)).astype(
+                             out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bs", "interpret"))
+def kv4_decode_attention(
+    q: jax.Array,       # (B, KVH, G, hd) — grouped query heads
+    k_q: jax.Array,     # (B, S, KVH, hd//2) int8, packed nibbles
+    k_s: jax.Array,     # (B, S, KVH) f32 per-token-head scales
+    v_q: jax.Array,     # (B, S, KVH, hd//2) int8
+    v_s: jax.Array,     # (B, S, KVH) f32
+    pos: jax.Array,     # (B,) int32 — current position (inclusive)
+    *,
+    bs: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns (B, KVH, G, hd) attention output. Cache stays packed-int4
+    in HBM; unpack+dequant are fused into the attention block scan."""
+    b, kvh, g, hd = q.shape
+    _, s, _, hdp = k_q.shape
+    assert hdp * 2 == hd, (hd, hdp)
+    assert s % bs == 0, (s, bs)
+    n_s = s // bs
+    scale = hd ** -0.5
+
+    grid = (b, kvh, n_s)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_s=n_s, bs=bs, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda ib, ih, isb: (ib,)),           # pos
+            pl.BlockSpec((1, 1, g, hd), lambda ib, ih, isb: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hdp),
+                         lambda ib, ih, isb: (ib, isb, ih, 0)),      # k_q
+            pl.BlockSpec((1, bs, 1), lambda ib, ih, isb: (ib, isb, ih)),
+            pl.BlockSpec((1, bs, 1, hdp),
+                         lambda ib, ih, isb: (ib, isb, ih, 0)),      # v_q
+            pl.BlockSpec((1, bs, 1), lambda ib, ih, isb: (ib, isb, ih)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda ib, ih, isb: (ib, ih, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),     # running max
+            pltpu.VMEM((g, 1), jnp.float32),     # running denominator
+            pltpu.VMEM((g, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(pos, q, k_q, k_s, v_q, v_s)

@@ -1,0 +1,108 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+``sparqle_linear`` is the framework's quantized-linear entry point. It hides
+tile padding, backend selection and the encode step:
+
+  * ``backend='pallas'``  — Pallas kernels (interpret=True on CPU; the real
+    TPU target when run on TPU devices);
+  * ``backend='xla'``     — the pure-XLA dual-pass path
+    (``core.sparse_matmul``), used inside pjit'd distributed graphs.
+
+Both backends implement the identical numerical contract (kernels/ref.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantize import QuantizedTensor, quantize_activations
+from repro.core.sparqle import SparqleActivation, encode, tile_population
+from repro.kernels.quant_matmul import quant_matmul
+from repro.kernels.sparqle_matmul import (
+    DEFAULT_BK, DEFAULT_BM, DEFAULT_BN, sparqle_matmul)
+
+
+def _pad_to(x: jax.Array, mult: tuple) -> jax.Array:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mult)]
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+def sparqle_linear(
+    x: jax.Array,
+    w: QuantizedTensor,
+    *,
+    col_mask: Optional[jax.Array] = None,
+    clip_l: Optional[jax.Array] = None,
+    clip_h: Optional[jax.Array] = None,
+    backend: str = "pallas",
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Quantize -> (clip) -> decompose -> dual-pass matmul. x: (..., K)."""
+    from repro.core.clipping import apply_clipping
+
+    orig = x.shape
+    k_in = orig[-1]
+    n_out = w.q.shape[-1]
+    x2 = x.reshape(-1, k_in)
+    m = x2.shape[0]
+
+    qa = quantize_activations(x2, bits=8, per_token=True)
+    q = qa.q
+    if col_mask is not None and clip_l is not None:
+        q = apply_clipping(q, col_mask, clip_l, clip_h)
+
+    if backend == "xla":
+        act = encode(q, 1.0)
+        from repro.core.sparse_matmul import sparqle_matmul_xla
+        out = sparqle_matmul_xla(
+            SparqleActivation(act.lsb4, act.msb4, act.pbm, jnp.float32(1.0)),
+            QuantizedTensor(w.q, jnp.ones_like(w.scale), w.zero, w.bits))
+        out = out * qa.scale * w.scale.reshape(1, -1)
+        return out.reshape(*orig[:-1], n_out).astype(x.dtype)
+
+    # pallas path: pad everything to tile multiples
+    act = encode(q, 1.0)
+    lsb = _pad_to(act.lsb4, (bm, bk))
+    msb = _pad_to(act.msb4, (bm, bk))
+    pbm = _pad_to(act.pbm, (bm, bk))
+    wq = _pad_to(w.q.astype(jnp.int8), (bk, bn))
+    asc = _pad_to(qa.scale.reshape(-1, 1).astype(jnp.float32), (bm, 1))
+    wsc = _pad_to(w.scale.reshape(1, -1).astype(jnp.float32), (1, bn))
+    pop = tile_population(pbm, bm, bk)
+    out = sparqle_matmul(lsb, msb, pop, wq, asc, wsc,
+                         bm=bm, bn=bn, bk=bk, interpret=interpret)
+    out = out[:m, :n_out]
+    return out.reshape(*orig[:-1], n_out).astype(x.dtype)
+
+
+def dense_quant_linear(
+    x: jax.Array,
+    w: QuantizedTensor,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Baseline dense W4A8 linear (no SPARQLe decomposition)."""
+    orig = x.shape
+    x2 = x.reshape(-1, orig[-1])
+    m = x2.shape[0]
+    n_out = w.q.shape[-1]
+    qa = quantize_activations(x2, bits=8, per_token=True)
+    a = _pad_to(qa.q, (bm, bk))
+    wq = _pad_to(w.q.astype(jnp.int8), (bk, bn))
+    asc = _pad_to(qa.scale.reshape(-1, 1).astype(jnp.float32), (bm, 1))
+    wsc = _pad_to(w.scale.reshape(1, -1).astype(jnp.float32), (1, bn))
+    out = quant_matmul(a, wq, asc, wsc, bm=bm, bn=bn, bk=bk,
+                       interpret=interpret)
+    out = out[:m, :n_out]
+    return out.reshape(*orig[:-1], n_out).astype(x.dtype)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the numerical contracts: each kernel's test sweeps shapes/dtypes
+and asserts allclose against the function of the same name here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sparqle_matmul_ref(
+    lsb4: jax.Array,      # (M, K) int8, values in [0, 15]
+    msb4: jax.Array,      # (M, K) int8, values in [-8, 7]
+    w: jax.Array,         # (K, N) int8, int4 payload in [-8, 7]
+    act_scale: jax.Array,  # (M, 1) f32
+    w_scale: jax.Array,    # (1, N) f32
+) -> jax.Array:
+    """Dual-pass W4A8 matmul: out = ((lsb + 16*msb) @ w) * scales."""
+    dense = jax.lax.dot_general(
+        lsb4.astype(jnp.int32), w.astype(jnp.int32),
+        (((1,), (0,)), ((), ())))
+    sparse = jax.lax.dot_general(
+        msb4.astype(jnp.int32), w.astype(jnp.int32),
+        (((1,), (0,)), ((), ())))
+    acc = dense + 16 * sparse
+    return acc.astype(jnp.float32) * act_scale * w_scale
+
+
+def quant_matmul_ref(
+    a: jax.Array,          # (M, K) int8 activations
+    w: jax.Array,          # (K, N) int8 (int4 payload)
+    act_scale: jax.Array,  # (M, 1) f32
+    w_scale: jax.Array,    # (1, N) f32
+) -> jax.Array:
+    """Dense int8 x int4 matmul (the paper's baseline accelerator)."""
+    acc = jax.lax.dot_general(
+        a.astype(jnp.int32), w.astype(jnp.int32), (((1,), (0,)), ((), ())))
+    return acc.astype(jnp.float32) * act_scale * w_scale
+
+
+def sparqle_encode_ref(x_int8: jax.Array):
+    """Drain-path encoder: int8 -> (lsb4, msb4, pbm)."""
+    x = x_int8.astype(jnp.int8)
+    msb = jnp.right_shift(x, 4)
+    lsb = jnp.bitwise_and(x, 0xF)
+    return lsb.astype(jnp.int8), msb.astype(jnp.int8), msb != 0
+
+
+def kv4_decode_attention_ref(q, k_q, k_s, v_q, v_s, pos):
+    """Decode attention over a packed-int4 KV cache (dense reference).
+
+    q (B,KVH,G,hd); k_q/v_q (B,S,KVH,hd//2) packed nibbles; scales
+    (B,S,KVH); pos (B,). Returns (B,KVH,G,hd) f32-computed output.
+    """
+    def unpack(p):
+        lo = jnp.right_shift(jnp.left_shift(p, 4), 4)
+        hi = jnp.right_shift(p, 4)
+        return jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1],
+                                                    p.shape[-1] * 2)
+
+    k = unpack(k_q).astype(jnp.float32) * k_s[..., None]
+    v = unpack(v_q).astype(jnp.float32) * v_s[..., None]
+    hd = q.shape[-1]
+    s = jnp.einsum("bhgd,bjhd->bhgj", q.astype(jnp.float32), k)
+    s = s * hd ** -0.5
+    smax = k.shape[1]
+    allow = jnp.arange(smax)[None, :] <= pos[:, None]
+    s = jnp.where(allow[:, None, None, :], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgj,bjhd->bhgd", p, v)
+    return out.astype(q.dtype)

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: fused drain-path SPARQLe encoder.
+
+The paper's drain phase (§3.3) writes linear-layer outputs back to SRAM
+*already in SPARQLe format* (MSB4/LSB4 splitters + sparse encoder beyond the
+drain buffer). The TPU-side analogue fuses output quantization with the
+LSB4/MSB4/PBM decomposition in one elementwise VPU kernel, so the next layer
+reads decomposed planes without a decompress-compute-recompress round trip.
+
+Outputs the per-(bm, bk) tile PBM population counts as well — the metadata
+the matmul kernel's ``@pl.when`` skipping consumes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, scale_ref, lsb_ref, msb_ref, pbm_ref, pop_ref):
+    x = x_ref[...].astype(jnp.float32) / scale_ref[...].astype(jnp.float32)
+    q = jnp.clip(jnp.round(x), -128, 127).astype(jnp.int8)
+    msb = jnp.right_shift(q, 4)
+    lsb = jnp.bitwise_and(q, 0xF)
+    pbm = msb != 0
+    lsb_ref[...] = lsb.astype(jnp.int8)
+    msb_ref[...] = msb.astype(jnp.int8)
+    pbm_ref[...] = pbm
+    pop_ref[0, 0] = jnp.sum(pbm.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+def sparqle_encode(
+    x: jax.Array,       # (M, K) f32/bf16 pre-quantization outputs
+    scale: jax.Array,   # (M, 1) f32 per-token scales
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+):
+    """Returns (lsb4, msb4, pbm, tile_pop) with tile_pop (M/bm, K/bk)."""
+    m, k = x.shape
+    assert m % bm == 0 and k % bk == 0, (x.shape, bm, bk)
+    grid = (m // bm, k // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.int8),
+            jax.ShapeDtypeStruct((m, k), jnp.int8),
+            jax.ShapeDtypeStruct((m, k), jnp.bool_),
+            jax.ShapeDtypeStruct((m // bm, k // bk), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, scale)

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: SPARQLe dual-pass matmul with PBM tile skipping.
+
+TPU adaptation of the paper's hybrid PE array (§3.3, DESIGN.md §2):
+
+  * the accelerator's *dense LSB4 pass* is one MXU matmul per (bm,bk,bn)
+    tile over the LSB4 plane;
+  * the *sparse MSB4 pass* is a second MXU matmul over the MSB4 plane,
+    predicated per K-tile with ``@pl.when(tile_pop > 0)`` — the TPU-granular
+    equivalent of the paper's PBM-gated operand dispatch (a 128x128 systolic
+    array cannot gate individual operands, so sub-precision sparsity is
+    exploited at VMEM-tile granularity; the paper's column-wise clipping is
+    what clusters MSB4 zeros into skippable tiles — see
+    ``clipping.importance_mask_tile_aligned``);
+  * shift-by-4 accumulation into the int32 accumulator = the paper's OFRF
+    accumulation of left-shifted sparse partial sums;
+  * per-token activation scales and per-channel weight scales applied at
+    drain time (the paper's drain-path SFU requantization).
+
+4-bit payloads (LSB4/MSB4 in [0,15]/[-8,7], int4 weights) travel in int8
+containers: ``jnp.int4`` is not fully supported by the CPU/interpret path
+used for validation. On real TPU the MXU consumes int8 natively; true int4
+packing halves DMA bytes and is accounted analytically in the roofline and
+the cost model.
+
+Grid: (M/bm, N/bn, K/bk), K innermost (``arbitrary``), output-stationary
+accumulator scratch in VMEM. ``tile_pop`` — the per-(M-tile, K-tile) PBM
+population count from ``core.sparqle.tile_population`` — is delivered as a
+(1,1) block (SMEM-resident scalar on real TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _kernel(pop_ref, lsb_ref, msb_ref, w_ref, ascale_ref, wscale_ref,
+            out_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[...].astype(jnp.int8)
+
+    # ---- dense pass: LSB4 (always executes) ----
+    lsb = lsb_ref[...].astype(jnp.int8)
+    acc_ref[...] += jax.lax.dot_general(
+        lsb, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    # ---- sparse pass: MSB4, skipped when this (m,k) tile has no PBM bits ----
+    pop = pop_ref[0, 0]
+
+    @pl.when(pop > 0)
+    def _sparse():
+        msb = msb_ref[...].astype(jnp.int8)
+        acc_ref[...] += (
+            jax.lax.dot_general(
+                msb, w, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            << 4)
+
+    # ---- drain: requantize with act/weight scales ----
+    @pl.when(k == n_k - 1)
+    def _drain():
+        out_ref[...] = (
+            acc_ref[...].astype(jnp.float32)
+            * ascale_ref[...].astype(jnp.float32)
+            * wscale_ref[...].astype(jnp.float32))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def sparqle_matmul(
+    lsb4: jax.Array,       # (M, K) int8 in [0, 15]
+    msb4: jax.Array,       # (M, K) int8 in [-8, 7]
+    tile_pop: jax.Array,   # (M/bm, K/bk) int32 PBM population per tile
+    w: jax.Array,          # (K, N) int8 (int4 payload)
+    act_scale: jax.Array,  # (M, 1) f32
+    w_scale: jax.Array,    # (1, N) f32
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    m, k = lsb4.shape
+    k2, n = w.shape
+    assert k == k2, (lsb4.shape, w.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"operands must be tile-aligned: {(m, k, n)} vs {(bm, bk, bn)}")
+    assert tile_pop.shape == (m // bm, k // bk), tile_pop.shape
+
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, kk: (i, kk)),        # tile_pop
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),      # lsb4
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),      # msb4
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),      # w
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),        # act_scale
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),        # w_scale
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(tile_pop, lsb4, msb4, w, act_scale, w_scale)

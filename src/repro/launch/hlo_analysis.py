@@ -1,0 +1,272 @@
+"""Static analyzer for optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` on the CPU backend undercounts our graphs in
+two ways that matter for the roofline: integer dot_generals (the SPARQLe
+int8 dual-pass matmuls) are not "flops", and ops inside ``while`` bodies
+(the layer scan, the grad-accumulation scan, flash-attention block scans)
+must be multiplied by their trip counts. This module walks the HLO call
+graph with per-computation execution multipliers and produces:
+
+  * ``flops``        — 2*M*N*K summed over every dot (any element type),
+  * ``coll_bytes``   — payload bytes per collective kind (result shapes),
+  * ``hbm_bytes``    — sum of operand+result bytes of every *top-level* op
+                       (fusion internals excluded — a fusion is the unit
+                       that reads/writes HBM), a structural proxy for Hh
+                       HBM traffic;
+  * per-op tallies for §Perf iteration (e.g. count of all-gathers of the
+    same tensor, dominant dot shapes).
+
+All shapes in partitioned HLO are per-device shard shapes, so every number
+is *per device* — matching roofline terms normalized per chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# shape group is lazy; the opcode must be a word immediately followed by '('
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((.*)$")
+_CALLEE_RE = re.compile(
+    r"(?:body|condition|calls|to_apply|true_computation|false_computation)="
+    r"%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_TRIP_RE = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+
+
+def shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    """All (dtype, dims) element shapes inside a (possibly tuple) shape."""
+    return [(m.group(1), [int(d) for d in m.group(2).split(",") if d])
+            for m in _SHAPE_RE.finditer(shape_str)
+            if m.group(1) in _DTYPE_BYTES]
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    opcode: str
+    rest: str          # operands + attributes (raw text)
+
+    @property
+    def operand_text(self) -> str:
+        """Text of the operand list (up to the matching close paren)."""
+        depth = 1
+        for i, c in enumerate(self.rest):
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    return self.rest[:i]
+        return self.rest
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    is_fusion_body: bool = False
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    """Parse computations; returns ({name: comp}, entry_name)."""
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        s = line.strip()
+        header = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{$", s)
+        if header and not s.startswith("//"):
+            cur = Computation(header.group(2), [])
+            comps[cur.name] = cur
+            if header.group(1):
+                entry = cur.name
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            cur.ops.append(Op(m.group(1), m.group(2).strip(), m.group(3),
+                              m.group(4)))
+    return comps, entry
+
+
+def _trip_count(op: Op, comps: Dict[str, Computation],
+                cond_name: Optional[str]) -> int:
+    """Trip count of a while: XLA's known_trip_count backend config, or the
+    largest constant in the condition computation as a fallback."""
+    m = _TRIP_RE.search(op.rest)
+    if m:
+        return int(m.group(1))
+    if cond_name and cond_name in comps:
+        consts = []
+        for cop in comps[cond_name].ops:
+            mm = _CONST_RE.search(cop.opcode + "(" + cop.rest)
+            if cop.opcode == "constant":
+                mm = re.search(r"^(\d+)\)", cop.rest)
+            if mm:
+                consts.append(int(mm.group(1)))
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _callees(op: Op) -> List[str]:
+    names = [m for m in _CALLEE_RE.findall(op.rest)]
+    bm = _BRANCH_RE.search(op.rest)
+    if bm:
+        names += [n.strip().lstrip("%") for n in bm.group(1).split(",")]
+    return names
+
+
+def compute_multipliers(comps: Dict[str, Computation],
+                        entry: str) -> Dict[str, float]:
+    """Execution count per computation, walking from ENTRY through
+    while(body x trip), fusion/call/reduce (x1), conditionals (x1)."""
+    mult: Dict[str, float] = defaultdict(float)
+
+    def visit(name: str, k: float):
+        if k <= 0 or name not in comps:
+            return
+        mult[name] += k
+        comp = comps[name]
+        for op in comp.ops:
+            if op.opcode == "while":
+                body = cond = None
+                for mm in re.finditer(r"(body|condition)=%?([\w\.\-]+)",
+                                      op.rest):
+                    if mm.group(1) == "body":
+                        body = mm.group(2)
+                    else:
+                        cond = mm.group(2)
+                trips = _trip_count(op, comps, cond)
+                if body:
+                    visit(body, k * trips)
+                if cond:
+                    visit(cond, k * (trips + 1))
+            elif op.opcode == "fusion":
+                for c in _callees(op):
+                    comps[c].is_fusion_body = True
+                    # fusion internals: counted for flops, not for HBM
+                    visit(c, k)
+            else:
+                for c in _callees(op):
+                    visit(c, k)
+
+    visit(entry, 1.0)
+    return dict(mult)
+
+
+def _dot_flops(op: Op, symtab: Dict[str, str]) -> float:
+    """2 * prod(output dims) * prod(contracting dims)."""
+    out = shape_dims(op.shape)
+    if not out:
+        return 0.0
+    _, out_dims = out[0]
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    # contracting dims from the lhs operand's shape
+    lhs_name_m = _OPERAND_RE.search(op.operand_text)
+    cdims_m = _CONTRACT_RE.search(op.rest)
+    k = 1
+    if lhs_name_m and cdims_m:
+        lhs_shape = symtab.get(lhs_name_m.group(1), "")
+        dims = shape_dims(lhs_shape)
+        if dims:
+            _, ld = dims[0]
+            for ci in (int(c) for c in cdims_m.group(1).split(",") if c):
+                if ci < len(ld):
+                    k *= ld[ci]
+    return 2.0 * out_n * k
+
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_count: Dict[str, float] = dataclasses.field(default_factory=dict)
+    dot_flops_by_dtype: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    top_dots: List[Tuple[float, str]] = dataclasses.field(
+        default_factory=list)
+    top_colls: List[Tuple[float, str]] = dataclasses.field(
+        default_factory=list)
+
+
+def analyze(text: str) -> HloStats:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        return HloStats()
+    mult = compute_multipliers(comps, entry)
+    stats = HloStats()
+    dot_acc: Dict[str, float] = defaultdict(float)
+    coll_acc: Dict[str, float] = defaultdict(float)
+
+    for cname, comp in comps.items():
+        k = mult.get(cname, 0.0)
+        if k <= 0:
+            continue
+        symtab = {op.name: op.shape for op in comp.ops}
+        for op in comp.ops:
+            if op.opcode == "dot":
+                f = _dot_flops(op, symtab) * k
+                stats.flops += f
+                dt = shape_dims(op.shape)
+                key = dt[0][0] if dt else "?"
+                stats.dot_flops_by_dtype[key] = (
+                    stats.dot_flops_by_dtype.get(key, 0.0) + f)
+                dot_acc[f"{op.shape} x{int(k)}"] += f
+            elif op.opcode in _COLLECTIVES:
+                b = shape_bytes(op.shape) * k
+                stats.coll_bytes[op.opcode] = (
+                    stats.coll_bytes.get(op.opcode, 0.0) + b)
+                stats.coll_count[op.opcode] = (
+                    stats.coll_count.get(op.opcode, 0.0) + k)
+                coll_acc[f"{op.opcode} {op.shape} x{int(k)}"] += b
+            # HBM proxy: top-level ops only (fusion bodies don't touch HBM)
+            if not comp.is_fusion_body and op.opcode not in (
+                    "parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast", "while", "conditional", "call"):
+                operand_b = 0
+                for on in _OPERAND_RE.findall(op.operand_text):
+                    if on in symtab:
+                        operand_b += shape_bytes(symtab[on])
+                stats.hbm_bytes += (operand_b + shape_bytes(op.shape)) * k
+    stats.coll_bytes["total"] = sum(stats.coll_bytes.values())
+    stats.top_dots = sorted(((v, k) for k, v in dot_acc.items()),
+                            reverse=True)[:12]
+    stats.top_colls = sorted(((v, k) for k, v in coll_acc.items()),
+                             reverse=True)[:12]
+    return stats

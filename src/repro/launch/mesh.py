@@ -1,0 +1,23 @@
+"""Production mesh construction (deliverable e).
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state. The single-pod mesh is
+16x16 = 256 chips over ("data", "model"); the multi-pod mesh adds an outer
+"pod" axis: 2 pods x 256 = 512 chips. The pod axis is the DCN-connected
+outer data-parallel axis (per-pod replica groups; gradients cross pods once
+per step), composing data parallelism over ICI within a pod.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(*, data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Tiny mesh over however many (CPU) devices exist — used by tests."""
+    return jax.make_mesh((data, model), ("data", "model"))

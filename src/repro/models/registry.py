@@ -1,0 +1,185 @@
+"""Architecture registry: ``--arch <id>`` -> config, schemas, input specs.
+
+One entry per assigned architecture. Provides everything the launchers and
+the dry-run need: full/smoke configs, float + SPARQLe-quantized parameter
+schemas, abstract input ShapeDtypeStructs per (shape-cell, step kind), and
+abstract KV/SSM cache trees for decode cells. The cell plan (which of the
+4 assigned shapes run vs. skip, and why) lives here as the single source
+of truth for the dry-run and EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (deepseek_moe_16b, deepseek_v3_671b, gemma3_27b,
+                           granite_8b, hubert_xlarge, jamba_v01_52b,
+                           mamba2_2p7b, paligemma_3b, starcoder2_3b, yi_6b)
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.models.schema import ParamSpec, Schema
+from repro.models.schema_builder import build_schema
+from repro.models.stages import build_stages
+
+_MODULES = [starcoder2_3b, granite_8b, gemma3_27b, yi_6b, hubert_xlarge,
+            jamba_v01_52b, deepseek_v3_671b, deepseek_moe_16b,
+            paligemma_3b, mamba2_2p7b]
+
+ARCHS: Dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+SMOKES: Dict[str, ModelConfig] = {m.CONFIG.name: m.SMOKE for m in _MODULES}
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    table = SMOKES if smoke else ARCHS
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(table)}")
+    return table[name]
+
+
+# ---------------------------------------------------------------------------
+# cell plan: which assigned shapes run for each arch
+# ---------------------------------------------------------------------------
+
+def cell_plan(name: str) -> List[Tuple[str, bool, str]]:
+    """[(shape, runs, reason)] for all four assigned shapes."""
+    cfg = get_config(name)
+    sub_quadratic = cfg.family in ("ssm", "hybrid") or bool(cfg.global_every)
+    plan = []
+    for sname, shp in SHAPES.items():
+        if cfg.family == "encoder" and shp.kind == "decode":
+            plan.append((sname, False, "encoder-only: no autoregressive step"))
+        elif sname == "long_500k" and not sub_quadratic:
+            plan.append((sname, False, "pure full attention: 500k decode "
+                                       "requires sub-quadratic attention"))
+        else:
+            plan.append((sname, True, ""))
+    return plan
+
+
+def runnable_cells() -> List[Tuple[str, str]]:
+    cells = []
+    for name in ARCHS:
+        for sname, runs, _ in cell_plan(name):
+            if runs:
+                cells.append((name, sname))
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs per (arch, shape, kind)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                kind: Optional[str] = None) -> Dict[str, Any]:
+    """Abstract model inputs for one shape cell.
+
+    ``kind`` defaults to the shape's own kind. For 'train' the dict has
+    tokens/frames/patches + targets; 'prefill' drops targets; 'decode'
+    returns {token, pos} (the cache is built by :func:`cache_specs`).
+    """
+    kind = kind or shape.kind
+    b, s = shape.global_batch, shape.seq_len
+    dt = cfg.cdtype
+    if kind == "decode":
+        return {"token": _sds((b,), jnp.int32), "pos": _sds((b,), jnp.int32)}
+    spec: Dict[str, Any] = {}
+    if cfg.family == "encoder":
+        spec["frames"] = _sds((b, s, cfg.d_model), dt)
+    elif cfg.family == "vlm":
+        spec["patches"] = _sds((b, cfg.n_prefix, cfg.d_model), dt)
+        spec["tokens"] = _sds((b, s - cfg.n_prefix), jnp.int32)
+    else:
+        spec["tokens"] = _sds((b, s), jnp.int32)
+    if kind == "train":
+        tgt_s = s - cfg.n_prefix if cfg.family == "vlm" else s
+        spec["targets"] = _sds((b, tgt_s), jnp.int32)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# abstract cache trees (as ParamSpec trees -> shardings derivable)
+# ---------------------------------------------------------------------------
+
+def cache_schema(cfg: ModelConfig, batch: int, max_len: int) -> Schema:
+    """ParamSpec tree mirroring the cache pytree prefill/decode use."""
+    b, smax = batch, max_len
+    dt = cfg.cdtype
+
+    # kv_bits==4 packs two nibbles per int8 byte (model._kv_quant)
+    pack = 2 if cfg.kv_bits == 4 else 1
+
+    def layer_cache(ld) -> Schema:
+        if ld.mixer == "attn":
+            kvh, hd = cfg.n_kv_heads, cfg.hd
+            return {
+                "k_q": ParamSpec((b, smax, kvh, hd // pack),
+                                 ("batch", "kv_seq", "kv_heads", None),
+                                 jnp.int8, init="zeros"),
+                "k_s": ParamSpec((b, smax, kvh),
+                                 ("batch", "kv_seq", "kv_heads"),
+                                 jnp.float32, init="ones"),
+                "v_q": ParamSpec((b, smax, kvh, hd // pack),
+                                 ("batch", "kv_seq", "kv_heads", None),
+                                 jnp.int8, init="zeros"),
+                "v_s": ParamSpec((b, smax, kvh),
+                                 ("batch", "kv_seq", "kv_heads"),
+                                 jnp.float32, init="ones"),
+            }
+        if ld.mixer == "mla":
+            return {
+                "ckv_q": ParamSpec((b, smax, cfg.kv_lora_rank // pack),
+                                   ("batch", "kv_seq", None),
+                                   jnp.int8, init="zeros"),
+                "ckv_s": ParamSpec((b, smax), ("batch", "kv_seq"),
+                                   jnp.float32, init="ones"),
+                "kr": ParamSpec((b, smax, cfg.qk_rope_dim),
+                                ("batch", "kv_seq", None), dt, init="zeros"),
+            }
+        # ssd
+        din = cfg.d_inner
+        g, n, p_ = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_head_dim
+        nh = din // p_
+        conv_ch = din + 2 * g * n
+        return {
+            "h": ParamSpec((b, g, nh // g, p_, n),
+                           ("batch", None, "heads", None, None),
+                           jnp.float32, init="zeros"),
+            "conv": ParamSpec((b, cfg.conv_width - 1, conv_ch),
+                              ("batch", None, "mlp"), dt, init="zeros"),
+        }
+
+    def stack(tree: Schema, repeat: int) -> Schema:
+        return {k: (stack(v, repeat) if isinstance(v, dict) else
+                    ParamSpec((repeat,) + v.shape, ("layers",) + v.axes,
+                              v.dtype, v.init, v.scale))
+                for k, v in tree.items()}
+
+    stages: Schema = {}
+    for si, stage in enumerate(build_stages(cfg)):
+        stages[f"s{si}"] = {
+            f"p{pi}": stack(layer_cache(ld), stage.repeat)
+            for pi, ld in enumerate(stage.period)}
+    return {"stages": stages}
+
+
+def model_schema(cfg: ModelConfig) -> Schema:
+    return build_schema(cfg)
+
+
+# re-exported conveniences -------------------------------------------------
+
+def describe(name: str) -> Dict[str, Any]:
+    from repro.models.schema import param_count
+    cfg = get_config(name)
+    n = param_count(build_schema(cfg))
+    return {
+        "name": name, "family": cfg.family, "layers": cfg.n_layers,
+        "d_model": cfg.d_model, "params_b": round(n / 1e9, 2),
+        "cells": cell_plan(name),
+    }

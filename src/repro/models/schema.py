@@ -1,0 +1,131 @@
+"""Parameter schema: declare params once, derive init / shardings / abstract.
+
+Each model family builds a nested dict of :class:`ParamSpec` (shape + logical
+axes + init scale). From the schema we derive:
+
+  * ``init_params``   — materialized arrays (smoke tests, real training),
+  * ``abstract_params`` — ShapeDtypeStructs (the dry-run lowers 671B-param
+    models without allocating a byte),
+  * ``param_pspecs``  — PartitionSpecs via the logical-axis rule table,
+  * ``param_shardings`` — NamedShardings for jit in_shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import spec_for
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis per dim
+    dtype: jnp.dtype = jnp.float32
+    init: str = "normal"              # normal | zeros | ones | embed
+    scale: Optional[float] = None     # overrides fan-in scaling
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Schema = Dict[str, object]  # nested dict of ParamSpec
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    # last dim is output features by convention; fan-in = prod of the rest
+    if len(shape) <= 1:
+        return max(1, shape[0] if shape else 1)
+    f = 1
+    for d in shape[:-1]:
+        f *= d
+    return f
+
+
+def _init_leaf(key, spec: ParamSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        std = spec.scale if spec.scale is not None else 1.0
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std
+                ).astype(spec.dtype)
+    std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(
+        _fan_in(spec.shape))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std
+            ).astype(spec.dtype)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _map_schema(schema: Schema, fn: Callable[[str, ParamSpec], object],
+                prefix: str = "") -> Dict:
+    out = {}
+    for k, v in schema.items():
+        path = f"{prefix}/{k}" if prefix else k
+        if _is_spec(v):
+            out[k] = fn(path, v)
+        else:
+            out[k] = _map_schema(v, fn, path)
+    return out
+
+
+def init_params(schema: Schema, key: jax.Array) -> Dict:
+    leaves = []
+    _map_schema(schema, lambda p, s: leaves.append(p) or p)
+    keys = dict(zip(sorted(leaves),
+                    jax.random.split(key, max(1, len(leaves)))))
+    return _map_schema(schema, lambda p, s: _init_leaf(keys[p], s))
+
+
+def abstract_params(schema: Schema) -> Dict:
+    return _map_schema(
+        schema, lambda p, s: jax.ShapeDtypeStruct(s.shape, s.dtype))
+
+
+def param_pspecs(schema: Schema, mesh: Mesh) -> Dict:
+    return _map_schema(
+        schema, lambda p, s: spec_for(s.axes, s.shape, mesh))
+
+
+def param_shardings(schema: Schema, mesh: Mesh) -> Dict:
+    return _map_schema(
+        schema,
+        lambda p, s: NamedSharding(mesh, spec_for(s.axes, s.shape, mesh)))
+
+
+def param_count(schema: Schema) -> int:
+    total = [0]
+
+    def add(p, s):
+        n = 1
+        for d in s.shape:
+            n *= d
+        total[0] += n
+        return None
+
+    _map_schema(schema, add)
+    return total[0]
+
+
+def param_bytes(schema: Schema) -> int:
+    total = [0]
+
+    def add(p, s):
+        n = np.dtype(s.dtype).itemsize
+        for d in s.shape:
+            n *= d
+        total[0] += n
+        return None
+
+    _map_schema(schema, add)
+    return total[0]

@@ -1,0 +1,181 @@
+"""Per-architecture parameter schema construction.
+
+Builds the nested ParamSpec tree for any :class:`ModelConfig`, organized by
+the stage plan (``stages.build_stages``): every leaf under ``stages/s<i>``
+carries a leading ``repeat`` (scan) dimension. Mixer/FFN projection leaves
+use the canonical names :mod:`repro.core.qlinear` recognizes, so the same
+tree quantizes into SPARQLe served form with zero model-code changes.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.schema import ParamSpec, Schema
+from repro.models.stages import LayerDef, Stage, build_stages
+
+
+def _norm_schema(cfg: ModelConfig, dim: int) -> Schema:
+    s: Schema = {"gamma": ParamSpec((dim,), (None,), init="zeros")}
+    if cfg.norm_type == "layer":
+        s = {"gamma": ParamSpec((dim,), (None,), init="ones"),
+             "beta": ParamSpec((dim,), (None,), init="zeros")}
+    return s
+
+
+def _attn_schema(cfg: ModelConfig) -> Schema:
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s: Schema = {
+        "ln": _norm_schema(cfg, d),
+        "wq": ParamSpec((d, h * hd), ("embed", "heads_flat")),
+        "wk": ParamSpec((d, kvh * hd), ("embed", "heads_flat")),
+        "wv": ParamSpec((d, kvh * hd), ("embed", "heads_flat")),
+        "wo": ParamSpec((h * hd, d), ("heads_flat", "embed")),
+    }
+    if cfg.use_bias:
+        s.update({
+            "bq": ParamSpec((h * hd,), (None,), init="zeros"),
+            "bk": ParamSpec((kvh * hd,), (None,), init="zeros"),
+            "bv": ParamSpec((kvh * hd,), (None,), init="zeros"),
+            "bo": ParamSpec((d,), (None,), init="zeros"),
+        })
+    if cfg.use_qk_norm:
+        s["q_norm"] = ParamSpec((hd,), (None,), init="zeros")
+        s["k_norm"] = ParamSpec((hd,), (None,), init="zeros")
+    return s
+
+
+def _mla_schema(cfg: ModelConfig) -> Schema:
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    return {
+        "ln": _norm_schema(cfg, d),
+        "wq_a": ParamSpec((d, rq), ("embed", None)),
+        "q_norm": ParamSpec((rq,), (None,), init="zeros"),
+        "wq_b": ParamSpec((rq, h * (dn + dr)), (None, "heads_flat")),
+        "wkv_a": ParamSpec((d, rkv + dr), ("embed", None)),
+        "kv_norm": ParamSpec((rkv,), (None,), init="zeros"),
+        "wkv_b": ParamSpec((rkv, h * (dn + dv)), (None, "heads_flat")),
+        "wo": ParamSpec((h * dv, d), ("heads_flat", "embed")),
+    }
+
+
+def _ssd_schema(cfg: ModelConfig) -> Schema:
+    d = cfg.d_model
+    din = cfg.d_inner
+    g, n, p_ = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_head_dim
+    nh = din // p_
+    conv_ch = din + 2 * g * n
+    return {
+        "ln": _norm_schema(cfg, d),
+        "w_in": ParamSpec((d, 2 * din + 2 * g * n + nh), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.conv_width, conv_ch), (None, "conv")),
+        "conv_b": ParamSpec((conv_ch,), ("conv",), init="zeros"),
+        "a_log": ParamSpec((g, nh // g), (None, None), init="zeros"),
+        "d_skip": ParamSpec((g, nh // g), (None, None), init="ones"),
+        "dt_bias": ParamSpec((nh,), (None,), init="zeros"),
+        "gn": ParamSpec((din,), (None,), init="zeros"),
+        "w_out": ParamSpec((din, d), ("mlp", "embed")),
+    }
+
+
+def _dense_ffn_schema(cfg: ModelConfig) -> Schema:
+    d, f = cfg.d_model, cfg.d_ff
+    s: Schema = {"ln2": _norm_schema(cfg, d)}
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        s.update({
+            "w_gate": ParamSpec((d, f), ("embed", "mlp")),
+            "w_up": ParamSpec((d, f), ("embed", "mlp")),
+            "w_down": ParamSpec((f, d), ("mlp", "embed")),
+        })
+    else:  # plain gelu MLP (starcoder2, hubert)
+        s.update({
+            "w_fc": ParamSpec((d, f), ("embed", "mlp")),
+            "w_proj": ParamSpec((f, d), ("mlp", "embed")),
+        })
+        if cfg.use_bias:
+            s["b_fc"] = ParamSpec((f,), ("mlp",), init="zeros")
+            s["b_proj"] = ParamSpec((d,), (None,), init="zeros")
+    return s
+
+
+def _moe_ffn_schema(cfg: ModelConfig) -> Schema:
+    d = cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    moe: Schema = {
+        "w_router": ParamSpec((d, e), ("embed", None)),
+        "w_gate": ParamSpec((e, d, f), ("experts", "embed", None)),
+        "w_up": ParamSpec((e, d, f), ("experts", "embed", None)),
+        "w_down": ParamSpec((e, f, d), ("experts", None, "embed")),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        moe.update({
+            "w_shared_gate": ParamSpec((d, fs), ("embed", "mlp")),
+            "w_shared_up": ParamSpec((d, fs), ("embed", "mlp")),
+            "w_shared_down": ParamSpec((fs, d), ("mlp", "embed")),
+        })
+    return {"ln2": _norm_schema(cfg, d), "moe": moe}
+
+
+def layer_schema(cfg: ModelConfig, ld: LayerDef) -> Schema:
+    s: Schema = {}
+    if ld.mixer == "attn":
+        s.update(_attn_schema(cfg))
+    elif ld.mixer == "mla":
+        s.update(_mla_schema(cfg))
+    elif ld.mixer == "ssd":
+        s.update(_ssd_schema(cfg))
+    else:
+        raise ValueError(ld.mixer)
+    if ld.ffn == "dense":
+        s.update(_dense_ffn_schema(cfg))
+    elif ld.ffn == "moe":
+        s.update(_moe_ffn_schema(cfg))
+    return s
+
+
+def _stack(schema: Schema, repeat: int) -> Schema:
+    """Prepend the scan ('layers') dim to every spec in the subtree."""
+    out: Schema = {}
+    for k, v in schema.items():
+        if isinstance(v, dict):
+            out[k] = _stack(v, repeat)
+        else:
+            out[k] = ParamSpec((repeat,) + v.shape, ("layers",) + v.axes,
+                               v.dtype, v.init, v.scale)
+    return out
+
+
+def build_schema(cfg: ModelConfig) -> Schema:
+    d, v = cfg.d_model, cfg.vocab
+    schema: Schema = {
+        "embed": {"table": ParamSpec((v, d), ("vocab", "embed"),
+                                     init="embed", scale=0.02)},
+        "stages": {},
+        "final_norm": _norm_schema(cfg, d),
+    }
+    for si, stage in enumerate(build_stages(cfg)):
+        period: Schema = {}
+        for pi, ld in enumerate(stage.period):
+            period[f"p{pi}"] = _stack(layer_schema(cfg, ld), stage.repeat)
+        schema["stages"][f"s{si}"] = period
+    if not cfg.tie_embeddings:
+        schema["lm_head"] = ParamSpec((d, v), ("embed", "vocab"),
+                                      scale=0.02)
+    if cfg.mtp_depth:
+        # deepseek-v3 multi-token prediction: one extra block per depth,
+        # sharing embedding and lm_head with the trunk.
+        mtp_ld = LayerDef("mla" if cfg.use_mla else "attn", "dense")
+        mcfg = cfg if cfg.d_ff else cfg.replace(d_ff=cfg.moe_d_ff * 4)
+        schema["mtp"] = {
+            "norm_h": _norm_schema(cfg, d),
+            "norm_e": _norm_schema(cfg, d),
+            "proj": ParamSpec((2 * d, d), (None, "embed")),
+            "block": _stack(layer_schema(mcfg, mtp_ld), cfg.mtp_depth),
+        }
+    return schema

@@ -1,0 +1,141 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked scan + decode step.
+
+The SSD recurrence  h_t = h_{t-1} * exp(dt_t A) + dt_t B_t x_t^T,
+y_t = C_t h_t + D x_t  is evaluated chunk-by-chunk (`lax.scan` over chunks):
+inside a chunk the quadratic "attention-like" dual form runs on the MXU;
+across chunks the state is carried — O(L) memory, matmul-dominated compute,
+which is exactly why SSD (vs Mamba-1's elementwise selective scan) is the
+right TPU-native formulation (DESIGN.md §2).
+
+Shapes: x (B, L, G, Hg, P) with H = G*Hg heads of dim P; B/C (B, L, G, N).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SSDState(NamedTuple):
+    h: jax.Array          # (B, G, Hg, P, N) f32 SSM state
+    conv: jax.Array       # (B, W-1, CH) conv tail
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, L, CH); w: (W, CH); b: (CH,)."""
+    wlen = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (wlen - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(wlen):  # W is 4 — unrolled taps stay vectorized over L
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i]
+    return (out + b).astype(x.dtype)
+
+
+def conv1d_step(conv_state: jax.Array, x_new: jax.Array, w: jax.Array,
+                b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One decode step. conv_state: (B, W-1, CH); x_new: (B, CH)."""
+    window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)
+    out = (window.astype(jnp.float32) * w[None]).sum(axis=1) + b
+    return window[:, 1:, :], out.astype(x_new.dtype)
+
+
+def ssd_chunked(
+    x: jax.Array,        # (B, L, G, Hg, P)
+    dt: jax.Array,       # (B, L, G, Hg)  — post-softplus
+    a_log: jax.Array,    # (G, Hg)        — A = -exp(a_log)
+    b_in: jax.Array,     # (B, L, G, N)
+    c_in: jax.Array,     # (B, L, G, N)
+    d_skip: jax.Array,   # (G, Hg)
+    chunk: int,
+    h0: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,L,G,Hg,P), final state (B,G,Hg,P,N))."""
+    bsz, l, g, hg, p = x.shape
+    n = b_in.shape[-1]
+    chunk = min(chunk, l)
+    pad = (-l) % chunk
+    if pad:  # tail-pad; dt=0 there, so padded steps are identity updates
+        padfn = lambda t: jnp.pad(  # noqa: E731
+            t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, b_in, c_in = map(padfn, (x, dt, b_in, c_in))
+    l_pad = l + pad
+    nc = l_pad // chunk
+    A = -jnp.exp(a_log.astype(jnp.float32))            # (G, Hg), negative
+
+    def to_chunks(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:]).transpose(
+            1, 0, *range(2, t.ndim + 1))
+
+    xc, dtc, bc, cc = map(to_chunks, (x, dt, b_in, c_in))
+    # xc: (nc, B, Q, G, Hg, P); dtc: (nc, B, Q, G, Hg); bc/cc: (nc, B, Q, G, N)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, g, hg, p, n), jnp.float32)
+
+    def chunk_step(h, inp):
+        xq, dtq, bq, cq = inp
+        xq = xq.astype(jnp.float32)
+        dtq = dtq.astype(jnp.float32)
+        bq = bq.astype(jnp.float32)
+        cq = cq.astype(jnp.float32)
+        aq = dtq * A                                   # (B,Q,G,Hg) negative
+        cs = jnp.cumsum(aq, axis=1)                    # decay from chunk start
+        total = cs[:, -1]                              # (B,G,Hg)
+
+        # intra-chunk dual (quadratic) form
+        scores = jnp.einsum("bign,bjgn->bgij", cq, bq)  # (B,G,Q,Q)
+        cs_t = cs.transpose(0, 2, 3, 1)                 # (B,G,Hg,Q)
+        decay = jnp.exp(cs_t[..., :, None] - cs_t[..., None, :])
+        iq = jnp.arange(chunk)
+        causal = (iq[:, None] >= iq[None, :]).astype(jnp.float32)
+        m = scores[:, :, None] * decay * causal
+        m = m * dtq.transpose(0, 2, 3, 1)[..., None, :]  # fold dt_j
+        y_intra = jnp.einsum("bghij,bjghp->bighp", m, xq)
+
+        # contribution of carried state
+        y_inter = jnp.einsum("bign,bghpn->bighp", cq, h)
+        y_inter = y_inter * jnp.exp(cs)[..., None]
+
+        # state update
+        w_j = jnp.exp(total[:, None] - cs) * dtq        # (B,Q,G,Hg)
+        s_new = jnp.einsum("bjgh,bjgn,bjghp->bghpn", w_j, bq, xq)
+        h_new = h * jnp.exp(total)[..., None, None] + s_new
+
+        y = y_intra + y_inter + xq * d_skip[None, None, :, :, None]
+        return h_new, y.astype(x.dtype)
+
+    h_final, ys = jax.lax.scan(chunk_step, h0, (xc, dtc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4, 5).reshape(bsz, l_pad, g, hg, p)
+    return y[:, :l], h_final
+
+
+def ssd_decode_step(
+    h: jax.Array,        # (B, G, Hg, P, N) carried state
+    x: jax.Array,        # (B, G, Hg, P) one token
+    dt: jax.Array,       # (B, G, Hg)
+    a_log: jax.Array,    # (G, Hg)
+    b_in: jax.Array,     # (B, G, N)
+    c_in: jax.Array,     # (B, G, N)
+    d_skip: jax.Array,   # (G, Hg)
+) -> Tuple[jax.Array, jax.Array]:
+    """One-token SSM update. Returns (y (B,G,Hg,P), new state)."""
+    A = -jnp.exp(a_log.astype(jnp.float32))
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    da = jnp.exp(dtf * A)                               # (B,G,Hg)
+    upd = jnp.einsum("bgh,bgn,bghp->bghpn", dtf, b_in.astype(jnp.float32), xf)
+    h_new = h * da[..., None, None] + upd
+    y = jnp.einsum("bgn,bghpn->bghp", c_in.astype(jnp.float32), h_new)
+    y = y + xf * d_skip[None, :, :, None]
+    return y.astype(x.dtype), h_new
+
+
+def gated_rms_norm(y: jax.Array, z: jax.Array, gamma: jax.Array,
+                   eps: float = 1e-6) -> jax.Array:
+    """Mamba-2's norm(y * silu(z)) output gate."""
+    dt = y.dtype
+    yz = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yz * yz, axis=-1, keepdims=True)
+    return ((yz * jax.lax.rsqrt(var + eps)) *
+            (1.0 + gamma.astype(jnp.float32))).astype(dt)

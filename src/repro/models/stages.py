@@ -1,0 +1,94 @@
+"""Layer-stacking plan: stages of scanned periods.
+
+Every architecture is expressed as a list of ``Stage``s; each stage scans a
+*period* — a short, fixed sequence of heterogeneous sub-layers — ``repeat``
+times with stacked parameters. This keeps the HLO O(period-length) in model
+depth while supporting heterogeneous interleaves exactly:
+
+  * dense transformer:  [attn+dense] x n_layers
+  * gemma3 (5 local : 1 global): period of 6 sub-layers (5 sliding-window +
+    1 global, different rope theta), repeated 10x, + a 2-layer tail stage
+  * jamba (1 attn : 7 mamba, MoE every 2nd): one 8-sub-layer period x 4
+  * deepseek-v3 (3 dense + 58 MoE): stage [mla+dense] x 3, stage [mla+moe] x 58
+  * mamba2: [ssd] x 64
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerDef:
+    mixer: str                  # "attn" | "mla" | "ssd"
+    ffn: str                    # "dense" | "moe" | "none"
+    window: int = 0             # 0 = full attention
+    rope_theta: float = 0.0     # 0 -> cfg.rope_theta
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    period: List[LayerDef]
+    repeat: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.period) * self.repeat
+
+
+def build_stages(cfg: ModelConfig) -> List[Stage]:
+    fam = cfg.family
+    if fam in ("transformer", "encoder", "vlm"):
+        if cfg.global_every:  # gemma3: (global_every-1) local then 1 global
+            ge = cfg.global_every
+            period = [LayerDef("attn", "dense", window=cfg.sliding_window)
+                      for _ in range(ge - 1)]
+            period += [LayerDef("attn", "dense", window=0, rope_theta=1e6)]
+            n_full, tail = divmod(cfg.n_layers, ge)
+            stages = [Stage(period, n_full)]
+            if tail:
+                stages.append(Stage(
+                    [LayerDef("attn", "dense", window=cfg.sliding_window)
+                     for _ in range(tail)], 1))
+            return stages
+        return [Stage([LayerDef("attn", "dense",
+                                window=cfg.sliding_window)], cfg.n_layers)]
+
+    if fam == "moe":
+        mixer = "mla" if cfg.use_mla else "attn"
+        stages = []
+        if cfg.first_dense:
+            stages.append(Stage([LayerDef(mixer, "dense")], cfg.first_dense))
+        n_moe = cfg.n_layers - cfg.first_dense
+        if cfg.moe_every > 1:
+            period = []
+            for i in range(cfg.moe_every):
+                period.append(LayerDef(
+                    mixer, "moe" if i % cfg.moe_every == cfg.moe_every - 1
+                    else "dense"))
+            stages.append(Stage(period, n_moe // cfg.moe_every))
+        else:
+            stages.append(Stage([LayerDef(mixer, "moe")], n_moe))
+        return stages
+
+    if fam == "hybrid":  # jamba: period of attn_every layers, 1 attn + rest ssd
+        ae = cfg.attn_every or 8
+        period = []
+        for i in range(ae):
+            mixer = "attn" if i == ae // 2 else "ssd"
+            ffn = "moe" if (cfg.n_experts and i % cfg.moe_every ==
+                            cfg.moe_every - 1) else "dense"
+            period.append(LayerDef(mixer, ffn))
+        assert cfg.n_layers % ae == 0, (cfg.n_layers, ae)
+        return [Stage(period, cfg.n_layers // ae)]
+
+    if fam == "ssm":
+        return [Stage([LayerDef("ssd", "none")], cfg.n_layers)]
+
+    raise ValueError(f"unknown family {fam}")
+
+
+def total_layers(stages: List[Stage]) -> int:
+    return sum(s.n_layers for s in stages)

@@ -1,0 +1,142 @@
+"""Pure-JAX optimizer substrate: AdamW + schedules + gradient utilities.
+
+Built for the scale the dry-run targets:
+  * optimizer moments stored in a configurable dtype (bf16 moments halve
+    optimizer HBM — the difference between deepseek-v3 fitting a pod or
+    not; see DESIGN.md);
+  * global-norm clipping;
+  * microbatch gradient accumulation lives in launch/steps.py (lax.scan);
+  * int8 error-feedback gradient compression for the cross-pod
+    all-reduce (distributed-optimization trick: 4x fewer DCN bytes, the
+    quantization error is carried into the next step so convergence is
+    preserved).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    moment_dtype: str = "bfloat16"     # bf16 moments: half the opt-state HBM
+
+    @property
+    def mdtype(self):
+        return jnp.bfloat16 if self.moment_dtype == "bfloat16" else jnp.float32
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any        # first moment (pytree, moment_dtype)
+    nu: Any        # second moment (pytree, moment_dtype)
+
+
+def init_opt_state(params: Any, cfg: OptConfig) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.mdtype)  # noqa: E731
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def cosine_lr(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(params: Any, grads: Any, state: OptState,
+                 cfg: OptConfig) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """One AdamW step. Params stay in their storage dtype (f32 master)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+    b1, b2 = cfg.betas
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (p_new.astype(p.dtype), m_new.astype(cfg.mdtype),
+                v_new.astype(cfg.mdtype))
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu)
+    p_new = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    mu = jax.tree_util.tree_map(lambda t: t[1], out,
+                                is_leaf=lambda t: isinstance(t, tuple))
+    nu = jax.tree_util.tree_map(lambda t: t[2], out,
+                                is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return p_new, OptState(step=step, mu=mu, nu=nu), metrics
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback gradient compression (cross-pod all-reduce shrink)
+# ---------------------------------------------------------------------------
+
+def compress_grads(grads: Any, error: Optional[Any] = None):
+    """Quantize gradients to int8 with per-leaf scales + error feedback.
+
+    Returns (q_tree {'q','scale'}, new_error). The caller all-reduces the
+    int8 payload across the 'pod' axis (4x fewer DCN bytes than f32), then
+    ``decompress_grads``. ``error`` carries this step's quantization
+    residual into the next step (standard EF-SGD; keeps convergence).
+    """
+    if error is None:
+        error = jax.tree_util.tree_map(jnp.zeros_like, grads)
+
+    def comp(g, e):
+        g = g + e.astype(g.dtype)
+        amax = jnp.max(jnp.abs(g)) + 1e-12
+        scale = amax / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        err = g - q.astype(g.dtype) * scale
+        return {"q": q, "scale": scale}, err
+
+    pairs = jax.tree_util.tree_map(comp, grads, error)
+    qs = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                is_leaf=lambda t: isinstance(t, tuple))
+    errs = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    return qs, errs
+
+
+def decompress_grads(qtree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda d: d["q"].astype(jnp.float32) * d["scale"],
+        qtree, is_leaf=lambda d: isinstance(d, dict) and "q" in d)

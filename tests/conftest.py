@@ -1,0 +1,10 @@
+import os
+
+# Tests run on the single real CPU device (the 512-device override is
+# strictly dryrun.py's, per the assignment). Keep XLA single-threaded-ish
+# and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,148 @@
+"""Attention-path oracles: blockwise flash vs naive masked attention,
+absorbed MLA vs explicitly materialized K/V, sliding windows, prefix-LM."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import AttnSpec, NEG_INF, flash_attention
+from repro.models.model import _mla_flash
+
+
+def naive_attention(q, k, v, allow):
+    """Reference: full (Sq, Skv) score matrix, f32."""
+    b, sq, h, hd = q.shape
+    _, skv, kvh, hdv = k.shape[0], k.shape[1], k.shape[2], v.shape[-1]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bikgd,bjkd->bkgij", qg, k.astype(jnp.float32))
+    s = s * hd ** -0.5
+    s = jnp.where(allow[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgij,bjkd->bikgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hdv)
+
+
+def _qkv(key, b=2, s=32, h=4, kvh=2, hd=16, hdv=None):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, s, h, hd))
+    k = jax.random.normal(k2, (b, s, kvh, hd))
+    v = jax.random.normal(k3, (b, s, kvh, hdv or hd))
+    return q, k, v
+
+
+@pytest.mark.parametrize("bq,bkv", [(8, 8), (16, 32), (32, 16)])
+def test_flash_matches_naive_causal(bq, bkv):
+    q, k, v = _qkv(jax.random.PRNGKey(0))
+    spec = AttnSpec(causal=True)
+    out = flash_attention(q, k, v, spec, bq=bq, bkv=bkv)
+    i = jnp.arange(32)
+    allow = i[None, :] <= i[:, None]
+    ref = naive_attention(q, k, v, allow)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_sliding_window():
+    q, k, v = _qkv(jax.random.PRNGKey(1))
+    w = 5
+    out = flash_attention(q, k, v, AttnSpec(causal=True, window=w),
+                          bq=8, bkv=8)
+    i = jnp.arange(32)
+    allow = (i[None, :] <= i[:, None]) & ((i[:, None] - i[None, :]) < w)
+    ref = naive_attention(q, k, v, allow)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_prefix_lm():
+    """paligemma: bidirectional prefix, causal suffix."""
+    q, k, v = _qkv(jax.random.PRNGKey(2))
+    p = 8
+    out = flash_attention(q, k, v, AttnSpec(causal=True, prefix_len=p),
+                          bq=8, bkv=8)
+    i = jnp.arange(32)
+    allow = (i[None, :] <= i[:, None]) | (i[None, :] < p)
+    ref = naive_attention(q, k, v, allow)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_bidirectional_encoder():
+    q, k, v = _qkv(jax.random.PRNGKey(3))
+    out = flash_attention(q, k, v, AttnSpec(causal=False), bq=8, bkv=16)
+    allow = jnp.ones((32, 32), bool)
+    ref = naive_attention(q, k, v, allow)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_separate_v_dim():
+    q, k, v = _qkv(jax.random.PRNGKey(4), hdv=24)
+    out = flash_attention(q, k, v, AttnSpec(causal=True), bq=8, bkv=8)
+    assert out.shape == (2, 32, 4, 24)
+    i = jnp.arange(32)
+    ref = naive_attention(q, k, v, i[None, :] <= i[:, None])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_flash_block_size_invariance(seed):
+    """The output must not depend on the blocking."""
+    q, k, v = _qkv(jax.random.PRNGKey(seed))
+    spec = AttnSpec(causal=True)
+    a = flash_attention(q, k, v, spec, bq=8, bkv=8)
+    b = flash_attention(q, k, v, spec, bq=32, bkv=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# absorbed MLA vs materialized reference
+# ---------------------------------------------------------------------------
+
+def test_mla_absorbed_equals_materialized():
+    """The weight-absorbed blockwise MLA must equal attention over the
+    explicitly expanded K/V (the correctness of DESIGN.md's MLA rewrite)."""
+    key = jax.random.PRNGKey(0)
+    b, s, H, dn, dr, dv, rkv = 2, 24, 4, 8, 4, 6, 16
+    qn = jax.random.normal(key, (b, s, H, dn))
+    qr = jax.random.normal(jax.random.PRNGKey(1), (b, s, H, dr))
+    ckv = jax.random.normal(jax.random.PRNGKey(2), (b, s, rkv))
+    kr = jax.random.normal(jax.random.PRNGKey(3), (b, s, dr))
+    w_uk = jax.random.normal(jax.random.PRNGKey(4), (rkv, H, dn)) * 0.3
+    w_uv = jax.random.normal(jax.random.PRNGKey(5), (rkv, H, dv)) * 0.3
+
+    out = _mla_flash(qn, qr, ckv, kr, w_uk, w_uv, causal=True,
+                     bq=8, bkv=8)
+
+    # reference: materialize per-head K = [k_nope; k_rope], V
+    k_nope = jnp.einsum("bsr,rhd->bshd", ckv, w_uk)
+    v = jnp.einsum("bsr,rhd->bshd", ckv, w_uv)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr[:, :, None, :], (b, s, H, dr))], -1)
+    q_full = jnp.concatenate([qn, qr], -1)
+    i = jnp.arange(s)
+    ref = naive_attention(q_full, k_full, v, i[None, :] <= i[:, None])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mla_flash_pad_invariance():
+    """Non-divisible sequence lengths (MTP's S-1) pad internally."""
+    key = jax.random.PRNGKey(7)
+    b, s, H, dn, dr, dv, rkv = 1, 13, 2, 8, 4, 6, 16
+    qn = jax.random.normal(key, (b, s, H, dn))
+    qr = jax.random.normal(jax.random.PRNGKey(1), (b, s, H, dr))
+    ckv = jax.random.normal(jax.random.PRNGKey(2), (b, s, rkv))
+    kr = jax.random.normal(jax.random.PRNGKey(3), (b, s, dr))
+    w_uk = jax.random.normal(jax.random.PRNGKey(4), (rkv, H, dn)) * 0.3
+    w_uv = jax.random.normal(jax.random.PRNGKey(5), (rkv, H, dv)) * 0.3
+    a = _mla_flash(qn, qr, ckv, kr, w_uk, w_uv, causal=True, bq=8, bkv=8)
+    full = _mla_flash(qn, qr, ckv, kr, w_uk, w_uv, causal=True,
+                      bq=13, bkv=13)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,147 @@
+"""Sparsity enhancement (paper §3.2): importance, clipping, Algorithm 1."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clipping import (apply_clipping, clip_fraction,
+                                 column_importance, enhanced_sparsity,
+                                 global_calibrate, importance_mask,
+                                 importance_mask_tile_aligned,
+                                 init_clip_params, learn_clipping_constants,
+                                 soft_clipping)
+from repro.core.sparqle import subprecision_sparsity
+
+
+def test_column_importance_is_weight_row_l1():
+    w = jnp.array([[1.0, -2.0], [0.5, 0.5], [3.0, 0.0]])
+    np.testing.assert_allclose(np.asarray(column_importance(w)),
+                               [3.0, 1.0, 3.0])
+
+
+def test_importance_mask_selects_k_least():
+    w = jnp.diag(jnp.array([1.0, 2.0, 3.0, 4.0]))
+    mask = importance_mask(w, 50.0)
+    np.testing.assert_array_equal(np.asarray(mask),
+                                  [True, True, False, False])
+
+
+def test_tile_aligned_mask_selects_blocks():
+    # 64 columns, tile 16 -> 4 blocks; make block 1 cheapest
+    imp = jnp.ones((64, 8))
+    imp = imp.at[16:32].set(0.01)
+    mask = importance_mask_tile_aligned(imp, 25.0, 16)
+    m = np.asarray(mask)
+    assert m[16:32].all() and m[:16].sum() == 0 and m[32:].sum() == 0
+
+
+def test_apply_clipping_semantics():
+    """[l, 0) -> 0; (15, h] -> 15; outside [l, h] untouched; unmasked
+    columns untouched — exactly Fig. 3."""
+    x = jnp.array([[-10, -5, -1, 0, 15, 16, 20, 25]], dtype=jnp.int8)
+    mask = jnp.ones((8,), bool)
+    y = np.asarray(apply_clipping(x, mask, l=-5, h=20))
+    np.testing.assert_array_equal(y[0], [-10, 0, 0, 0, 15, 15, 15, 25])
+    # unmasked: nothing moves
+    y2 = np.asarray(apply_clipping(x, jnp.zeros((8,), bool), -5, 20))
+    np.testing.assert_array_equal(y2, np.asarray(x))
+
+
+def test_clipping_increases_sparsity_monotonically():
+    x = jax.random.randint(jax.random.PRNGKey(0), (256, 256), -128, 128,
+                           dtype=jnp.int8)
+    mask = jnp.ones((256,), bool)
+    prev = float(subprecision_sparsity(x))
+    for l, h in [(-4, 19), (-16, 31), (-64, 79)]:
+        nat, enh = enhanced_sparsity(x, mask, l, h)
+        assert float(nat) == pytest.approx(prev if l == -4 else float(nat))
+        assert float(enh) >= prev
+        prev = float(enh)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(-64, -1), st.integers(16, 90))
+def test_property_clip_error_bounded(seed, l, h):
+    """Every clipped value moves by at most max(|l|, h-15)."""
+    x = jax.random.randint(jax.random.PRNGKey(seed), (64, 64), -128, 128,
+                           dtype=jnp.int8)
+    mask = jnp.ones((64,), bool)
+    y = apply_clipping(x, mask, l, h)
+    delta = np.abs(np.asarray(y).astype(int) - np.asarray(x).astype(int))
+    assert delta.max() <= max(abs(l), h - 15)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_clip_idempotent(seed):
+    x = jax.random.randint(jax.random.PRNGKey(seed), (32, 32), -128, 128,
+                           dtype=jnp.int8)
+    mask = jnp.ones((32,), bool)
+    y1 = apply_clipping(x, mask, -8, 23)
+    y2 = apply_clipping(y1, mask, -8, 23)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_soft_clipping_converges_to_hard():
+    x = jnp.array([[-6, -3, 18, 30]], dtype=jnp.int8)
+    mask = jnp.ones((4,), jnp.float32)
+    l, h = jnp.float32(-5.0), jnp.float32(20.0)
+    y_soft, _ = soft_clipping(x, mask, l, h, tau=0.01)
+    y_hard = apply_clipping(x, mask.astype(bool), -5, 20)
+    np.testing.assert_allclose(np.asarray(y_soft),
+                               np.asarray(y_hard).astype(np.float32),
+                               atol=0.1)
+
+
+def test_soft_clipping_gradients_flow_to_lh():
+    x = jax.random.randint(jax.random.PRNGKey(1), (64, 16), -128, 128,
+                           dtype=jnp.int8)
+    mask = jnp.ones((16,), jnp.float32)
+
+    def f(lh):
+        y, m = soft_clipping(x, mask, lh[0], lh[1], tau=2.0)
+        return jnp.sum(y ** 2) * 1e-4 - jnp.mean(m)
+
+    g = jax.grad(f)(jnp.array([-8.0, 23.0]))
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert np.any(np.asarray(g) != 0)
+
+
+def test_global_calibrate_picks_tradeoff():
+    # fake eval: wider range -> more sparsity, quadratically more error
+    def eval_fn(l, h):
+        width = (-l) + (h - 15)
+        return float(width ** 2) * 1e-4, min(1.0, 0.3 + width * 0.01)
+
+    res = global_calibrate(eval_fn, l_candidates=(-4, -16, -64),
+                           h_candidates=(19, 31, 79), lam=10.0)
+    # should not pick the most aggressive (error explodes) nor necessarily
+    # the mildest; sanity: result is a real candidate with finite score
+    assert res.l in (-4, -16, -64) and res.h in (19, 31, 79)
+    assert res.l != -64 or res.h != 79  # most aggressive pair rejected
+
+
+def test_algorithm1_learns_wider_bounds():
+    """Eq. 3's sparsity reward should push (l, h) outward when error is
+    cheap (identity-ish base model)."""
+    key = jax.random.PRNGKey(0)
+    data = jax.random.randint(key, (4, 32, 16), -40, 56, dtype=jnp.int8)
+    mask = jnp.ones((16,), jnp.float32)
+
+    def apply_clip(cp, batch):
+        y, m = soft_clipping(batch, mask, cp["l"][0], cp["h"][0], tau=4.0)
+        return y * 0.01, jnp.mean(m)
+
+    def apply_base(batch):
+        return batch.astype(jnp.float32) * 0.01
+
+    cp0 = init_clip_params(1, l0=-1.0, h0=16.0)
+    cp, hist = learn_clipping_constants(
+        apply_clip, apply_base, data, cp0, epochs=23, lr=1.0, alpha=0.5)
+    assert float(cp["l"][0]) < -1.0         # lower bound moved out
+    assert float(cp["h"][0]) > 16.0         # upper bound moved out
+    # learned constants clip MORE of a fixed batch than the initial ones
+    _, m0 = apply_clip(cp0, data[0])
+    _, m1 = apply_clip(cp, data[0])
+    assert float(m1) > float(m0)

@@ -1,0 +1,198 @@
+"""Distribution machinery: manual-EP MoE, sharding profiles, HLO analyzer,
+packed KV4, dry-run lowering — the multi-device paths run in a subprocess
+with forced host devices (the main test process keeps 1 device)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import (analyze, parse_hlo, shape_bytes,
+                                       shape_dims)
+
+
+def _run_subprocess(code: str, devices: int = 8) -> str:
+    env = {"XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
+           "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu", "PATH": "/usr/bin:/bin"}
+    import os
+    env["PATH"] = os.environ.get("PATH", env["PATH"])
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, cwd="/root/repo", timeout=540)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return out.stdout
+
+
+def test_moe_manual_ep_matches_reference_multidevice():
+    out = _run_subprocess(textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.sharding import mesh_context
+        from repro.models import moe as moe_lib
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        key = jax.random.PRNGKey(0)
+        t, d, e, f, k = 64, 16, 8, 24, 2
+        x = jax.random.normal(key, (t, d))
+        wr = jax.random.normal(jax.random.PRNGKey(1), (d, e))
+        wg = jax.random.normal(jax.random.PRNGKey(2), (e, d, f)) * .3
+        wu = jax.random.normal(jax.random.PRNGKey(3), (e, d, f)) * .3
+        wd = jax.random.normal(jax.random.PRNGKey(4), (e, f, d)) * .3
+        ref = moe_lib.moe_ffn(x, wr, wg, wu, wd, top_k=k,
+                              capacity_factor=8.0)
+        with mesh_context(mesh):
+            y = jax.jit(lambda *a: moe_lib.moe_ffn_dist(
+                *a, top_k=k, capacity_factor=8.0))(x, wr, wg, wu, wd)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   rtol=2e-2, atol=2e-2)
+        g = jax.grad(lambda w: jnp.sum(moe_lib.moe_ffn_dist(
+            x, wr, w, wu, wd, top_k=k, capacity_factor=8.0) ** 2))
+        with mesh_context(mesh):
+            gv = jax.jit(g)(wg)
+        assert bool(jnp.isfinite(gv).all())
+        print("EP_OK")
+    """))
+    assert "EP_OK" in out
+
+
+def test_dryrun_lower_cell_smoke_multidevice():
+    """One real lower+compile of a small cell on 64 fake devices, both
+    profiles — the dry-run machinery itself under test."""
+    out = _run_subprocess(textwrap.dedent("""
+        import jax, json
+        from repro.launch.dryrun import lower_cell
+        mesh = jax.make_mesh((4, 16), ("data", "model"))
+        import repro.models.registry as R
+        R.ARCHS = dict(R.ARCHS)
+        R.ARCHS['yi-6b'] = R.ARCHS['yi-6b'].replace(n_layers=2)
+        for profile in ("baseline", "tuned"):
+            rec, c = lower_cell('yi-6b', 'decode_32k', mesh,
+                                profile=profile)
+            assert rec['flops_hlo'] > 0
+            assert rec['collective_bytes']['total'] >= 0
+            print(profile, int(rec['collective_bytes']['total']))
+        print("DRYRUN_OK")
+    """), devices=64)
+    assert "DRYRUN_OK" in out
+    lines = [l for l in out.splitlines() if l.startswith(("baseline",
+                                                          "tuned"))]
+    base = int(lines[0].split()[1])
+    tuned = int(lines[1].split()[1])
+    assert tuned < base  # serving-weight replication must cut collectives
+
+
+# ---------------------------------------------------------------------------
+# packed KV4
+# ---------------------------------------------------------------------------
+
+def test_kv4_pack_roundtrip():
+    from repro.models.model import _kv_dequant, _kv_quant
+    from repro.models.registry import SMOKES
+    cfg = SMOKES["granite-8b"]          # kv_bits=4
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 3, 16))
+    q, s = _kv_quant(cfg, x)
+    assert q.shape == (2, 5, 3, 8)      # two nibbles per byte
+    y = _kv_dequant(cfg, q, s, jnp.float32)
+    assert y.shape == x.shape
+    rel = float(jnp.abs(y - x).max() / jnp.abs(x).max())
+    assert rel < 0.25                   # int4 quantization error only
+
+
+def test_kv4_pack_exact_for_int_values():
+    """Values already on the int4 grid roundtrip exactly through packing."""
+    from repro.models.model import _kv_dequant, _kv_quant
+    from repro.models.registry import SMOKES
+    cfg = SMOKES["granite-8b"]
+    # amax == 7 -> scale 1 -> the int grid roundtrips exactly
+    ints = jnp.array([-7, -3, 0, 1, 5, 7, -1, 2],
+                     dtype=jnp.float32)[None, None, None, :]
+    q, s = _kv_quant(cfg, ints)
+    y = _kv_dequant(cfg, q, s, jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ints), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer
+# ---------------------------------------------------------------------------
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[4,8]{1,0}") == 64
+    assert shape_bytes("(f32[2]{0}, s8[3]{0})") == 11
+    assert shape_dims("s32[128,16]{1,0}") == [("s32", [128, 16])]
+
+
+HLO = """\
+HloModule test
+
+%body (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], f32[4,4]{1,0}) parameter(0)
+  %a1 = f32[4,4]{1,0} get-tuple-element(%p), index=1
+  %dot.1 = f32[4,4]{1,0} dot(%a1, %a1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[4,4]{1,0} all-reduce(%dot.1), to_apply=%add
+}
+
+%cond (p: (s32[], f32[4,4])) -> pred[] {
+  %c = s32[] constant(5)
+}
+
+ENTRY %main (x: f32[4,4]) -> f32[4,4] {
+  %a = f32[4,4]{1,0} parameter(0)
+  %b2 = f32[4,8]{1,0} parameter(1)
+  %w = (s32[], f32[4,4]{1,0}) while(%t), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  %dot.2 = f32[4,8]{1,0} dot(%a, %b2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_analyzer_trip_count_multiplication():
+    st = analyze(HLO)
+    # dot.1 (2*4*4*4=128 flops) x5 trips + dot.2 (2*4*8*4=256) x1
+    assert st.flops == 128 * 5 + 256
+    assert st.coll_bytes["all-reduce"] == 64 * 5
+    assert st.coll_count["all-reduce"] == 5
+
+
+def test_analyzer_parses_real_artifact():
+    """The committed dry-run artifacts were produced by this analyzer;
+    cross-check one for internal consistency."""
+    import os
+    path = "runs/dryrun/singlepod/yi-6b__train_4k.json"
+    if not os.path.exists(path):
+        pytest.skip("dry-run artifacts not present")
+    rec = json.load(open(path))
+    assert rec["flops_hlo"] > 1e13                     # scan-multiplied
+    assert rec["collective_bytes"]["total"] == pytest.approx(
+        sum(v for k, v in rec["collective_bytes"].items()
+            if k != "total"))
+    # 6ND useful-flops sanity: within [0.2, 1.0] of compiled flops
+    from benchmarks.roofline import model_flops
+    mf = model_flops("yi-6b", "train_4k") / rec["n_devices"]
+    assert 0.2 < mf / rec["flops_hlo"] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# profiles
+# ---------------------------------------------------------------------------
+
+def test_profile_rules_decisions():
+    from repro.distributed.sharding import profile_rules
+    from repro.models.registry import ARCHS
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    fm = FakeMesh()
+    # small dense model: tuned drops FSDP for train and serve
+    assert profile_rules("tuned", ARCHS["yi-6b"], "train", fm) == \
+        {"embed": ()}
+    assert profile_rules("tuned", ARCHS["granite-8b"], "decode", fm,
+                         global_batch=128) == {"embed": ()}
+    # 671B: keeps FSDP
+    assert profile_rules("tuned", ARCHS["deepseek-v3-671b"], "train",
+                         fm) == {}
+    # degenerate decode batch keeps FSDP
+    assert profile_rules("tuned", ARCHS["gemma3-27b"], "decode", fm,
+                         global_batch=1) == {}
+    # baseline never overrides
+    assert profile_rules("baseline", ARCHS["yi-6b"], "train", fm) == {}

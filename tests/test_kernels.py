@@ -1,0 +1,187 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (kernels/ref.py).
+
+Every Pallas kernel is validated in interpret mode on CPU across shapes,
+sparsity levels and value ranges, plus hypothesis property tests.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantize import quantize_activations, quantize_weights
+from repro.core.sparqle import encode, tile_population
+from repro.kernels.ops import dense_quant_linear, sparqle_linear
+from repro.kernels.quant_matmul import quant_matmul
+from repro.kernels.ref import (quant_matmul_ref, sparqle_encode_ref,
+                               sparqle_matmul_ref)
+from repro.kernels.sparqle_encode import sparqle_encode
+from repro.kernels.sparqle_matmul import sparqle_matmul
+
+
+def _mk_inputs(key, m, k, n, sparsity=0.5):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # control sub-precision sparsity: values in [0,15] with prob `sparsity`
+    small = jax.random.randint(k1, (m, k), 0, 16, dtype=jnp.int8)
+    big = jax.random.randint(k2, (m, k), -128, 128, dtype=jnp.int8)
+    pick = jax.random.uniform(k3, (m, k)) < sparsity
+    x = jnp.where(pick, small, big).astype(jnp.int8)
+    w = jax.random.randint(k4, (k, n), -8, 8, dtype=jnp.int8)
+    asc = jax.random.uniform(k1, (m, 1), minval=0.5, maxval=2.0)
+    wsc = jax.random.uniform(k2, (1, n), minval=0.5, maxval=2.0)
+    return x, w, asc, wsc
+
+
+SHAPES = [(128, 128, 128), (256, 384, 128), (128, 256, 256)]
+SPARSITIES = [0.0, 0.5, 1.0]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("s", SPARSITIES)
+def test_sparqle_matmul_allclose(m, k, n, s):
+    x, w, asc, wsc = _mk_inputs(jax.random.PRNGKey(42), m, k, n, s)
+    a = encode(x)
+    pop = tile_population(a.pbm, 128, 128)
+    out = sparqle_matmul(a.lsb4, a.msb4, pop, w, asc, wsc)
+    ref = sparqle_matmul_ref(a.lsb4, a.msb4, w, asc, wsc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_quant_matmul_allclose(m, k, n):
+    x, w, asc, wsc = _mk_inputs(jax.random.PRNGKey(7), m, k, n)
+    out = quant_matmul(x, w, asc, wsc)
+    ref = quant_matmul_ref(x, w, asc, wsc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+def test_sparqle_vs_dense_identity():
+    """The dual-pass kernel on (lsb, msb) equals the dense kernel on x —
+    the numerical-equivalence claim of paper §3.3."""
+    x, w, asc, wsc = _mk_inputs(jax.random.PRNGKey(3), 128, 256, 128, 0.7)
+    a = encode(x)
+    pop = tile_population(a.pbm, 128, 128)
+    out_sparqle = sparqle_matmul(a.lsb4, a.msb4, pop, w, asc, wsc)
+    out_dense = quant_matmul(x, w, asc, wsc)
+    np.testing.assert_allclose(np.asarray(out_sparqle),
+                               np.asarray(out_dense), rtol=1e-6)
+
+
+def test_sparse_pass_skipping_correct():
+    """Fully sub-precision-sparse input: all MSB tiles empty, result exact
+    (the @pl.when skip must not change the output)."""
+    x = jax.random.randint(jax.random.PRNGKey(0), (128, 256), 0, 16,
+                           dtype=jnp.int8)
+    w = jax.random.randint(jax.random.PRNGKey(1), (256, 128), -8, 8,
+                           dtype=jnp.int8)
+    asc = jnp.ones((128, 1)); wsc = jnp.ones((1, 128))
+    a = encode(x)
+    pop = tile_population(a.pbm, 128, 128)
+    assert int(pop.sum()) == 0
+    out = sparqle_matmul(a.lsb4, a.msb4, pop, w, asc, wsc)
+    ref = quant_matmul_ref(x, w, asc, wsc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("bm,bk", [(128, 128), (128, 256)])
+def test_sparqle_encode_kernel(bm, bk):
+    x = jax.random.normal(jax.random.PRNGKey(5), (256, 256)) * 30
+    scale = jnp.abs(jax.random.normal(jax.random.PRNGKey(6), (256, 1))) + 0.5
+    lsb, msb, pbm, pop = sparqle_encode(x, scale, bm=bm, bk=bk)
+    q = jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+    lref, mref, pref = sparqle_encode_ref(q)
+    np.testing.assert_array_equal(np.asarray(lsb), np.asarray(lref))
+    np.testing.assert_array_equal(np.asarray(msb), np.asarray(mref))
+    np.testing.assert_array_equal(np.asarray(pbm), np.asarray(pref))
+    np.testing.assert_array_equal(
+        np.asarray(pop), np.asarray(tile_population(pref, bm, bk)))
+
+
+@pytest.mark.parametrize("shape", [(5, 100), (3, 7, 64), (130, 200)])
+@pytest.mark.parametrize("backend", ["pallas", "xla"])
+def test_sparqle_linear_unaligned_shapes(shape, backend):
+    """ops.sparqle_linear pads arbitrary shapes and matches a float matmul
+    up to quantization error."""
+    key = jax.random.PRNGKey(11)
+    x = jax.random.normal(key, shape)
+    wf = jax.random.normal(jax.random.PRNGKey(12), (shape[-1], 96)) * 0.1
+    w = quantize_weights(wf, bits=4, axis=0)
+    out = sparqle_linear(x, w, backend=backend)
+    ref = x @ w.dequantize()
+    # int8 act + int4 weight quantization error bound (loose)
+    err = np.abs(np.asarray(out) - np.asarray(ref))
+    rel = err.max() / (np.abs(np.asarray(ref)).max() + 1e-6)
+    assert rel < 0.15, rel
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.floats(0.0, 1.0),
+       st.sampled_from([(128, 128, 128), (256, 128, 128)]))
+def test_property_dual_pass_equals_dense(seed, s, shape):
+    """Property: for ANY int8 tensor, dual-pass == single dense pass."""
+    m, k, n = shape
+    x, w, asc, wsc = _mk_inputs(jax.random.PRNGKey(seed), m, k, n, s)
+    a = encode(x)
+    pop = tile_population(a.pbm, 128, 128)
+    out = sparqle_matmul(a.lsb4, a.msb4, pop, w, asc, wsc)
+    ref = quant_matmul_ref(x, w, asc, wsc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("b,s,kvh,g,hd,bs", [
+    (1, 256, 1, 2, 16, 128), (2, 512, 2, 4, 32, 256),
+    (2, 512, 4, 1, 64, 512),
+])
+def test_kv4_decode_attention_allclose(b, s, kvh, g, hd, bs):
+    """Fused packed-KV4 decode attention vs the dense dequantized oracle,
+    swept over head groupings, head dims and cache blockings."""
+    from repro.kernels.kv_attention import kv4_decode_attention
+    from repro.kernels.ref import kv4_decode_attention_ref
+    key = jax.random.PRNGKey(b * 100 + s)
+    q = jax.random.normal(key, (b, kvh, g, hd))
+    kq = jax.random.randint(jax.random.PRNGKey(1), (b, s, kvh, hd // 2),
+                            -128, 128, jnp.int8)
+    vq = jax.random.randint(jax.random.PRNGKey(2), (b, s, kvh, hd // 2),
+                            -128, 128, jnp.int8)
+    ks = jax.random.uniform(jax.random.PRNGKey(3), (b, s, kvh),
+                            minval=0.1, maxval=1.0)
+    vs = jax.random.uniform(jax.random.PRNGKey(4), (b, s, kvh),
+                            minval=0.1, maxval=1.0)
+    pos = jax.random.randint(jax.random.PRNGKey(5), (b,), 1, s,
+                             dtype=jnp.int32)
+    out = kv4_decode_attention(q, kq, ks, vq, vs, pos, bs=bs)
+    ref = kv4_decode_attention_ref(q, kq, ks, vq, vs, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_kv4_decode_attention_matches_model_cache_format():
+    """The kernel consumes exactly what model._kv_quant writes."""
+    from repro.kernels.kv_attention import kv4_decode_attention
+    from repro.kernels.ref import kv4_decode_attention_ref
+    from repro.models.model import _kv_quant
+    from repro.models.registry import SMOKES
+    cfg = SMOKES["granite-8b"]  # kv_bits=4 packed
+    b, s, kvh, hd = 2, 128, cfg.n_kv_heads, cfg.hd
+    g = cfg.n_heads // kvh
+    k = jax.random.normal(jax.random.PRNGKey(0), (b, s, kvh, hd))
+    v = jax.random.normal(jax.random.PRNGKey(1), (b, s, kvh, hd))
+    kq, ks = _kv_quant(cfg, k)
+    vq, vs = _kv_quant(cfg, v)
+    q = jax.random.normal(jax.random.PRNGKey(2), (b, kvh, g, hd))
+    pos = jnp.full((b,), s - 1, jnp.int32)
+    out = kv4_decode_attention(q, kq, ks, vq, vs, pos, bs=64)
+    ref = kv4_decode_attention_ref(q, kq, ks, vq, vs, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_xla_and_pallas_backends_agree():
+    x = jax.random.normal(jax.random.PRNGKey(9), (64, 192))
+    wf = jax.random.normal(jax.random.PRNGKey(10), (192, 64)) * 0.2
+    w = quantize_weights(wf, bits=4, axis=0)
+    a = sparqle_linear(x, w, backend="pallas")
+    b = sparqle_linear(x, w, backend="xla")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,129 @@
+"""Quantization substrate: W4/W2/A8/KV4 + the qlinear dispatch layer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.qlinear import (SparqleLinear, expert_linear, linear,
+                                quantize_leaf, quantize_model_params)
+from repro.core.quantize import (fake_quantize, quantize_activations,
+                                 quantize_kv, quantize_weights)
+from repro.core.sparqle import subprecision_sparsity
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_weight_quant_range_and_error(bits):
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 32)) * 0.3
+    qt = quantize_weights(w, bits=bits, axis=0)
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    q = np.asarray(qt.q)
+    assert q.min() >= lo and q.max() <= hi
+    err = np.abs(np.asarray(qt.dequantize()) - np.asarray(w))
+    # error bounded by half a quantization step per channel
+    step = np.asarray(qt.scale)
+    assert (err <= 0.5 * step + 1e-6).all()
+
+
+def test_activation_quant_per_token_scales():
+    x = jnp.stack([jnp.ones(16) * 0.1, jnp.ones(16) * 100.0])
+    qt = quantize_activations(x, bits=8, per_token=True)
+    assert qt.scale.shape == (2, 1)
+    np.testing.assert_allclose(np.asarray(qt.dequantize()), np.asarray(x),
+                               rtol=0.02)
+
+
+def test_zero_point_adjustment_boosts_sparsity():
+    """Paper §3.1: zero-point shift moves non-centered (SiLU-like)
+    activations into the MSB4==0 range."""
+    x = jax.nn.silu(jax.random.normal(jax.random.PRNGKey(1), (128, 128)) * 2)
+    q_sym = quantize_activations(x, zero_point=False).q
+    q_zp = quantize_activations(x, zero_point=True).q
+    assert float(subprecision_sparsity(q_zp)) > \
+        float(subprecision_sparsity(q_sym))
+
+
+def test_kv4_roundtrip_error():
+    kv = jax.random.normal(jax.random.PRNGKey(2), (4, 16, 8, 32))
+    qt = quantize_kv(kv, bits=4)
+    err = np.abs(np.asarray(qt.dequantize()) - np.asarray(kv))
+    rel = err.max() / np.abs(np.asarray(kv)).max()
+    assert rel < 0.2
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 4, 8]))
+def test_property_quant_monotone(seed, bits):
+    """Quantization preserves per-channel ordering up to one step."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (32,)) * 2
+    qt = quantize_weights(w.reshape(-1, 1), bits=bits, axis=0)
+    deq = np.asarray(qt.dequantize()).ravel()
+    worig = np.asarray(w)
+    order = np.argsort(worig)
+    assert (np.diff(deq[order]) >= -float(qt.scale.max()) - 1e-6).all()
+
+
+def test_fake_quantize_shape_dtype():
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 8, 16))
+    y = fake_quantize(x, bits=8)
+    assert y.shape == x.shape
+
+
+# ---------------------------------------------------------------------------
+# qlinear dispatch
+# ---------------------------------------------------------------------------
+
+def test_linear_float_and_quantized_agree():
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 64))
+    w = jax.random.normal(jax.random.PRNGKey(5), (64, 32)) * 0.2
+    sl = quantize_leaf(w, w_bits=4, enable_clipping=False)
+    yf = linear(x, w)
+    yq = linear(x, sl)
+    cos = float((yf * yq).sum() /
+                (jnp.linalg.norm(yf) * jnp.linalg.norm(yq)))
+    assert cos > 0.98
+
+
+def test_sparqle_mode_equals_dense_mode():
+    """Decomposition is exact: sparqle and dense served modes agree."""
+    x = jax.random.normal(jax.random.PRNGKey(6), (8, 64))
+    w = jax.random.normal(jax.random.PRNGKey(7), (64, 32)) * 0.2
+    sls = quantize_leaf(w, mode="sparqle", enable_clipping=False)
+    sld = quantize_leaf(w, mode="dense", enable_clipping=False)
+    np.testing.assert_allclose(np.asarray(linear(x, sls)),
+                               np.asarray(linear(x, sld)), rtol=1e-5)
+
+
+def test_expert_linear_quantized():
+    x = jax.random.normal(jax.random.PRNGKey(8), (4, 6, 32))   # (E, C, K)
+    w = jax.random.normal(jax.random.PRNGKey(9), (4, 32, 16)) * 0.2
+    sl = quantize_leaf(w, w_bits=4, enable_clipping=False)
+    yf = expert_linear(x, w)
+    yq = expert_linear(x, sl)
+    cos = float((yf * yq).sum() /
+                (jnp.linalg.norm(yf) * jnp.linalg.norm(yq)))
+    assert cos > 0.98
+
+
+def test_quantize_model_params_structure():
+    params = {
+        "stages": {"s0": {"p0": {
+            "wq": jnp.ones((2, 16, 32)),            # stacked (L,K,N)
+            "ln": {"gamma": jnp.zeros((2, 16))},
+            "moe": {"w_gate": jnp.ones((4, 16, 8)),  # experts (E,K,N)
+                    "w_router": jnp.ones((16, 4))},
+        }}},
+        "lm_head": jnp.ones((16, 64)),
+    }
+    q = quantize_model_params(params, tile_k=8)
+    assert isinstance(q["stages"]["s0"]["p0"]["wq"], SparqleLinear)
+    # int4 payload nibble-packed two-per-byte along K
+    assert q["stages"]["s0"]["p0"]["wq"].w.q.shape == (2, 8, 32)
+    assert q["stages"]["s0"]["p0"]["wq"].shape == (2, 16, 32)
+    assert q["stages"]["s0"]["p0"]["wq"].w.scale.shape == (2, 1, 32)
+    assert isinstance(q["stages"]["s0"]["p0"]["moe"]["w_gate"],
+                      SparqleLinear)
+    # router and norms untouched
+    assert isinstance(q["stages"]["s0"]["p0"]["moe"]["w_router"], jax.Array)
+    assert isinstance(q["stages"]["s0"]["p0"]["ln"]["gamma"], jax.Array)
+    assert isinstance(q["lm_head"], SparqleLinear)

@@ -1,0 +1,95 @@
+"""Core SPARQLe codec: exactness, Eq. 1/2, tile metadata (paper §3.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparqle import (LP_HIGH, LP_LOW, compression_percent, decode,
+                                encode, encoded_bytes, ops_reduction_percent,
+                                subprecision_sparsity, tile_population,
+                                tile_sparsity)
+
+
+def test_roundtrip_all_int8_values():
+    """encode/decode is the identity on every representable int8 value."""
+    x = jnp.arange(-128, 128, dtype=jnp.int8).reshape(16, 16)
+    a = encode(x)
+    np.testing.assert_array_equal(np.asarray(decode(a)), np.asarray(x))
+
+
+def test_identity_decomposition():
+    """x == 16*msb4 + lsb4 with lsb4 in [0,15], msb4 in [-8,7]."""
+    x = jnp.arange(-128, 128, dtype=jnp.int8)
+    a = encode(x)
+    lsb, msb = np.asarray(a.lsb4), np.asarray(a.msb4)
+    assert lsb.min() >= 0 and lsb.max() <= 15
+    assert msb.min() >= -8 and msb.max() <= 7
+    np.testing.assert_array_equal(16 * msb.astype(np.int32) + lsb,
+                                  np.arange(-128, 128))
+
+
+def test_pbm_marks_exactly_nonzero_msb():
+    x = jnp.arange(-128, 128, dtype=jnp.int8)
+    a = encode(x)
+    pbm = np.asarray(a.pbm)
+    in_lp_range = (np.arange(-128, 128) >= LP_LOW) & \
+                  (np.arange(-128, 128) <= LP_HIGH)
+    np.testing.assert_array_equal(~pbm, in_lp_range)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_roundtrip_random(seed):
+    x = jax.random.randint(jax.random.PRNGKey(seed), (64,), -128, 128,
+                           dtype=jnp.int8)
+    assert (decode(encode(x)) == x).all()
+
+
+def test_sparsity_definition():
+    # values 0..15 have MSB4 == 0; everything else doesn't
+    x = jnp.array([0, 15, 16, -1, 7, 127, -128], dtype=jnp.int8)
+    s = float(subprecision_sparsity(x))
+    assert s == pytest.approx(3 / 7)
+
+
+def test_eq1_compression():
+    # paper: for p=8, compression% = (4s-1)/8 * 100
+    for s in (0.0, 0.25, 0.5, 0.618, 1.0):
+        expected = (4 * s - 1) / 8 * 100
+        assert float(compression_percent(s)) == pytest.approx(expected,
+                                                              abs=1e-4)
+
+
+def test_eq2_ops_reduction():
+    assert float(ops_reduction_percent(0.5)) == pytest.approx(25.0)
+    assert float(ops_reduction_percent(0.618)) == pytest.approx(30.9)
+
+
+def test_encoded_bytes_matches_eq1():
+    shape = (128, 256)
+    n = 128 * 256
+    for s in (0.0, 0.5, 1.0):
+        b = encoded_bytes(shape, s)
+        dense = n  # 1 byte/elem
+        saved_pct = (dense - b) / dense * 100
+        assert saved_pct == pytest.approx(float(compression_percent(s)),
+                                          abs=1e-3)
+
+
+def test_tile_population_and_sparsity():
+    pbm = jnp.zeros((8, 8), bool).at[0, 0].set(True).at[7, 7].set(True)
+    pop = tile_population(pbm, 4, 4)
+    np.testing.assert_array_equal(np.asarray(pop),
+                                  [[1, 0], [0, 1]])
+    assert float(tile_sparsity(pbm, 4, 4)) == pytest.approx(0.5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([(32, 32), (64, 128)]))
+def test_tile_population_consistent_with_pbm(seed, shape):
+    x = jax.random.randint(jax.random.PRNGKey(seed), shape, -128, 128,
+                           dtype=jnp.int8)
+    a = encode(x)
+    pop = tile_population(a.pbm, 16, 16)
+    assert int(pop.sum()) == int(a.pbm.sum())

@@ -1,0 +1,306 @@
+"""Substrate subsystems: data pipeline, optimizer, checkpoint, fault loop,
+sharding rules, MoE and SSD numerics."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import store
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.distributed.fault import (FaultInjector, RestartableLoop,
+                                     StepFault)
+from repro.distributed.sharding import spec_for
+from repro.models import moe as moe_lib
+from repro.models import ssd as ssd_lib
+from repro.optim.adamw import (OptConfig, adamw_update, compress_grads,
+                               cosine_lr, decompress_grads, global_norm,
+                               init_opt_state)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_restartable():
+    d = SyntheticLM(DataConfig(vocab=64, seq_len=32, global_batch=4))
+    b1 = d.batch_at(7)
+    b2 = d.batch_at(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # host_slice materializes exactly its rows
+    half = d.batch_at(7, host_slice=slice(2, 4))
+    np.testing.assert_array_equal(half["tokens"], b1["tokens"][2:4])
+
+
+def test_data_targets_are_shifted_tokens():
+    d = SyntheticLM(DataConfig(vocab=64, seq_len=32, global_batch=2))
+    b = d.batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+
+def test_data_is_learnable_structure():
+    """The Markov grammar bounds the successor set: each token has <= 8
+    successors (so a model CAN learn it)."""
+    d = SyntheticLM(DataConfig(vocab=64, seq_len=256, global_batch=8))
+    b = d.batch_at(0)
+    succ = {}
+    for row_t, row_g in zip(b["tokens"], b["targets"]):
+        for a, bb in zip(row_t, row_g):
+            succ.setdefault(int(a), set()).add(int(bb))
+    non_eos = {k: v for k, v in succ.items() if k != 0}
+    avg = np.mean([len(v) for v in non_eos.values()])
+    assert avg <= 9  # 8 successors + eos
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_reduces_quadratic():
+    ocfg = OptConfig(lr=0.1, warmup_steps=1, total_steps=100,
+                     weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = init_opt_state(params, ocfg)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = adamw_update(params, grads, state, ocfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_cosine_schedule_shape():
+    ocfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                     min_lr_ratio=0.1)
+    lrs = [float(cosine_lr(ocfg, jnp.asarray(s))) for s in
+           [0, 5, 10, 55, 100]]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert 0.1 < lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.1)
+
+
+def test_grad_clip_and_norm():
+    g = {"a": jnp.ones((3,)) * 4.0}
+    assert float(global_norm(g)) == pytest.approx(np.sqrt(48))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_grad_compression_error_feedback(seed):
+    """EF compression: quantization residual is carried, so the SUM of
+    decompressed grads over steps tracks the true sum (bias-free)."""
+    key = jax.random.PRNGKey(seed)
+    true_sum = jnp.zeros((32,))
+    sent_sum = jnp.zeros((32,))
+    err = None
+    for i in range(8):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, i), (32,))}
+        q, err = compress_grads(g, err)
+        sent = decompress_grads(q)
+        true_sum = true_sum + g["w"]
+        sent_sum = sent_sum + sent["w"]
+    resid = np.abs(np.asarray(sent_sum - true_sum)).max()
+    # leftover error is bounded by one quantization step
+    assert resid <= float(err["w"].__abs__().max()) + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                  "d": jnp.asarray(3, jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    store.save(str(tmp_path), t, 5)
+    assert store.latest_step(str(tmp_path)) == 5
+    r = store.restore(str(tmp_path), 5, t)
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(r)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_incomplete_ignored(tmp_path):
+    t = _tree()
+    store.save(str(tmp_path), t, 5)
+    # corrupt a later checkpoint: manifest says writing
+    os.makedirs(tmp_path / "step_000000009")
+    with open(tmp_path / "step_000000009" / "manifest.json", "w") as f:
+        f.write('{"status": "writing"}')
+    assert store.latest_step(str(tmp_path)) == 5
+
+
+def test_checkpoint_prune(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        store.save(str(tmp_path), t, s)
+    store.prune(str(tmp_path), keep=2)
+    assert store.latest_step(str(tmp_path)) == 4
+    assert store.restore(str(tmp_path), 3, t) is not None
+    with pytest.raises(FileNotFoundError):
+        store.restore(str(tmp_path), 1, t)
+
+
+def test_async_writer(tmp_path):
+    w = store.AsyncWriter(str(tmp_path))
+    t = _tree()
+    for s in (10, 20):
+        w.submit(t, s)
+    w.close()
+    assert store.latest_step(str(tmp_path)) == 20
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_restartable_loop_recovers(tmp_path):
+    calls = []
+
+    def step_fn(state, batch):
+        calls.append(int(batch))
+        return {"x": state["x"] + batch}, {"loss": state["x"]}
+
+    inj = FaultInjector(plan={7: "fail"})
+    loop = RestartableLoop(step_fn, lambda s: jnp.asarray(s),
+                           str(tmp_path), ckpt_every=5, injector=inj)
+    state, _ = loop.run({"x": jnp.asarray(0)}, 0, 10)
+    # sum over steps 0..9 regardless of the injected failure/replay
+    assert int(state["x"]) == sum(range(10))
+    assert loop.report.restarts == 1 and loop.report.faults_seen == 1
+
+
+def test_restartable_loop_budget_exhausted(tmp_path):
+    inj = FaultInjector(plan={})
+
+    def bad_step(state, batch):
+        raise StepFault("always")
+
+    loop = RestartableLoop(bad_step, lambda s: jnp.asarray(s),
+                           str(tmp_path), ckpt_every=5, max_restarts=2)
+    with pytest.raises(RuntimeError):
+        loop.run({"x": jnp.asarray(0)}, 0, 4)
+
+
+def test_elastic_restore_across_mesh(tmp_path):
+    """A checkpoint written under one mesh restores under another
+    (resharding happens at device_put; here 1-device degenerate case
+    exercises the API path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    t = {"w": jnp.arange(16.0).reshape(4, 4)}
+    store.save(str(tmp_path), t, 1)
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    r = store.restore(str(tmp_path), 1, t, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(r["w"]), np.asarray(t["w"]))
+    assert r["w"].sharding == sh["w"]
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_spec_for_divisibility_fallback():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # model axis size 1 -> everything degrades to unsharded
+    p = spec_for(("batch", "seq", "mlp"), (8, 16, 32), mesh)
+    assert all(e is None for e in p)
+
+
+def test_spec_for_used_axis_filtering():
+    # fake a 2x2 mesh over (data, model) using 1 device? -> need real mesh
+    # sizes; emulate with a 1x1 and rule logic via direct call is limited.
+    # Validate the priority logic shape-only with a (data=1, model=1) mesh:
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    p = spec_for(("batch", "kv_seq", "kv_heads", None), (4, 64, 2, 16),
+                 mesh)
+    assert len(p) == 0 or all(e is None for e in p)
+
+
+# ---------------------------------------------------------------------------
+# MoE / SSD numerics
+# ---------------------------------------------------------------------------
+
+def test_moe_dispatch_matches_dense_computation():
+    """With ample capacity, sort-based dispatch == explicit per-token
+    expert evaluation."""
+    key = jax.random.PRNGKey(0)
+    t, d, e, f, k = 16, 8, 4, 12, 2
+    x = jax.random.normal(key, (t, d))
+    wr = jax.random.normal(jax.random.PRNGKey(1), (d, e))
+    wg = jax.random.normal(jax.random.PRNGKey(2), (e, d, f)) * 0.3
+    wu = jax.random.normal(jax.random.PRNGKey(3), (e, d, f)) * 0.3
+    wd = jax.random.normal(jax.random.PRNGKey(4), (e, f, d)) * 0.3
+    y = moe_lib.moe_ffn(x, wr, wg, wu, wd, top_k=k, capacity_factor=4.0)
+
+    topv, topi = moe_lib.router(x, wr, "softmax", k)
+    ref = jnp.zeros((t, d))
+    for ti in range(t):
+        for kk in range(k):
+            ei = int(topi[ti, kk])
+            h = jax.nn.silu(x[ti] @ wg[ei]) * (x[ti] @ wu[ei])
+            ref = ref.at[ti].add(float(topv[ti, kk]) * (h @ wd[ei]))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_moe_capacity_drops_overflow():
+    x = jnp.ones((8, 4))
+    wr = jnp.zeros((4, 2)).at[:, 0].set(1.0)  # all tokens -> expert 0
+    wg = jnp.ones((2, 4, 4)); wu = jnp.ones((2, 4, 4))
+    wd = jnp.ones((2, 4, 4))
+    y = moe_lib.moe_ffn(x, wr, wg, wu, wd, top_k=1, capacity_factor=0.5)
+    # capacity = 8*1*0.5/2 = 2 slots; 6 of 8 tokens dropped -> zero rows
+    zero_rows = (np.abs(np.asarray(y)).sum(-1) < 1e-6).sum()
+    assert zero_rows == 6
+
+
+def test_ssd_chunked_equals_stepwise():
+    """Chunked SSD scan == token-by-token recurrence (state-space duality
+    correctness)."""
+    b, l, g, hg, p, n = 2, 12, 1, 3, 4, 8
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, l, g, hg, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1),
+                                           (b, l, g, hg)))
+    a_log = jax.random.normal(jax.random.PRNGKey(2), (g, hg)) * 0.1
+    bb = jax.random.normal(jax.random.PRNGKey(3), (b, l, g, n))
+    cc = jax.random.normal(jax.random.PRNGKey(4), (b, l, g, n))
+    dsk = jnp.ones((g, hg)) * 0.5
+    y_chunk, h_chunk = ssd_lib.ssd_chunked(x, dt, a_log, bb, cc, dsk,
+                                           chunk=4)
+    h = jnp.zeros((b, g, hg, p, n))
+    ys = []
+    for t in range(l):
+        y_t, h = ssd_lib.ssd_decode_step(h, x[:, t], dt[:, t], a_log,
+                                         bb[:, t], cc[:, t], dsk)
+        ys.append(y_t)
+    y_step = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_step),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_chunked_pad_invariance():
+    """Non-divisible seq len (internal padding) gives the same prefix."""
+    b, l, g, hg, p, n = 1, 10, 1, 2, 4, 4
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, l, g, hg, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1),
+                                           (b, l, g, hg)))
+    a_log = jnp.zeros((g, hg))
+    bb = jax.random.normal(jax.random.PRNGKey(3), (b, l, g, n))
+    cc = jax.random.normal(jax.random.PRNGKey(4), (b, l, g, n))
+    dsk = jnp.zeros((g, hg))
+    y4, _ = ssd_lib.ssd_chunked(x, dt, a_log, bb, cc, dsk, chunk=4)
+    y10, _ = ssd_lib.ssd_chunked(x, dt, a_log, bb, cc, dsk, chunk=10)
+    np.testing.assert_allclose(np.asarray(y4), np.asarray(y10),
+                               rtol=1e-4, atol=1e-4)

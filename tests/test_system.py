@@ -1,0 +1,132 @@
+"""End-to-end system tests: train -> checkpoint -> restore -> quantize ->
+SPARQLe serve, with fault injection — the whole production path on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.core.qlinear import quantize_model_params
+from repro.core.quantize import quantize_activations
+from repro.core.sparqle import subprecision_sparsity
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.distributed.fault import FaultInjector, RestartableLoop
+from repro.launch import steps as S
+from repro.models import model as M
+from repro.models.registry import SMOKES
+from repro.models.schema import init_params
+from repro.models.schema_builder import build_schema
+from repro.optim.adamw import OptConfig, init_opt_state
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """Train the granite smoke model briefly on synthetic data."""
+    cfg = SMOKES["granite-8b"].replace(vocab=256)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                  global_batch=8, seed=3))
+    ocfg = OptConfig(lr=3e-3, warmup_steps=10, total_steps=200)
+    step = jax.jit(S.make_train_step(
+        cfg, ocfg, S.TrainKnobs(microbatch=4, ce_chunk=32)),
+        donate_argnums=0)
+    params = init_params(build_schema(cfg), jax.random.PRNGKey(0))
+    state = S.TrainState(params, init_opt_state(params, ocfg))
+    losses = []
+    for i in range(200):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    return cfg, data, state, losses
+
+
+def test_training_learns(trained):
+    cfg, data, state, losses = trained
+    assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
+
+
+def test_train_with_fault_recovery_matches_clean_run(tmp_path, trained):
+    """A run with an injected failure converges to the SAME state as a
+    clean run (deterministic data + checkpoint replay)."""
+    cfg, data, _, _ = trained
+    ocfg = OptConfig(lr=2e-3, warmup_steps=2, total_steps=20)
+    step = jax.jit(S.make_train_step(cfg, ocfg, S.TrainKnobs(ce_chunk=32)))
+
+    def make_batch(i):
+        return {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+
+    def run(ckdir, injector):
+        params = init_params(build_schema(cfg), jax.random.PRNGKey(1))
+        st = S.TrainState(params, init_opt_state(params, ocfg))
+        loop = RestartableLoop(step, make_batch, str(ckdir),
+                               ckpt_every=5, injector=injector)
+        st, _ = loop.run(st, 0, 12)
+        return st, loop
+
+    st_clean, _ = run(tmp_path / "clean", None)
+    st_fault, loop = run(tmp_path / "fault",
+                         FaultInjector(plan={8: "fail"}))
+    assert loop.report.restarts == 1
+    for a, b in zip(jax.tree_util.tree_leaves(st_clean.params),
+                    jax.tree_util.tree_leaves(st_fault.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_roundtrip_full_state(tmp_path, trained):
+    cfg, _, state, _ = trained
+    store.save(str(tmp_path), state, 42)
+    restored = store.restore(str(tmp_path), 42, state)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quantized_serving_of_trained_model(trained):
+    """The paper's deployment: quantize the trained model W4A8 + clipping
+    and decode greedily — outputs stay close to the float model, and the
+    trained activations show real sub-precision sparsity."""
+    cfg, data, state, _ = trained
+    params = state.params
+    qparams = quantize_model_params(params, w_bits=4, k_percent=50.0,
+                                    tile_k=16)
+    B, P, GEN = 2, 32, 6
+    prompts = jnp.asarray(data.batch_at(500)["tokens"])[:B, :P]
+
+    def decode_n(p):
+        tok, cache = S.make_serve_prefill(cfg, P + GEN)(
+            p, {"tokens": prompts})
+        outs = [tok]
+        for i in range(GEN - 1):
+            tok, cache = S.make_serve_decode(cfg)(
+                p, cache, tok, jnp.full((B,), P + i, jnp.int32))
+            outs.append(tok)
+        return jnp.stack(outs, 1)
+
+    gen_f = decode_n(params)
+    gen_q = decode_n(qparams)
+    agree = float((gen_f == gen_q).mean())
+    assert agree >= 0.5, f"greedy agreement {agree} too low"
+
+    hidden = M.forward_hidden(cfg, params, {"tokens": prompts})
+    q8 = quantize_activations(hidden.reshape(-1, hidden.shape[-1]),
+                              bits=8, per_token=True).q
+    s = float(subprecision_sparsity(q8))
+    # sanity floor only — the quantitative sparsity claims are measured on
+    # the properly-sized benchmark model (benchmarks/bench_compression.py:
+    # 28-45% at linear inputs); this 64-dim smoke model quantizes coarsely
+    assert s > 0.08, f"trained activations should be MSB4-sparse, got {s}"
+
+
+def test_compressed_grad_training_converges(trained):
+    """int8 EF gradient compression doesn't break optimization."""
+    cfg, data, _, _ = trained
+    ocfg = OptConfig(lr=3e-3, warmup_steps=5, total_steps=60)
+    step = jax.jit(S.make_train_step(
+        cfg, ocfg, S.TrainKnobs(ce_chunk=32, compress_pod_grads=True)))
+    params = init_params(build_schema(cfg), jax.random.PRNGKey(2))
+    st = S.TrainState(params, init_opt_state(params, ocfg))
+    losses = []
+    for i in range(60):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        st, m = step(st, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.2
