@@ -8,6 +8,7 @@ Prints ``name,value,derived-from`` CSV rows. Modules:
   * bench_layerwise   — Fig. 8 per-projection latency trend
   * bench_accuracy    — Table 2 analogue on the self-trained LM
   * bench_kernels     — tile-skip co-design validation + kernel timings
+  * bench_serving     — continuous-batching engine under a Poisson trace
 
 Roofline (deliverable g) is separate: ``python -m benchmarks.roofline``
 reads the dry-run artifacts.
@@ -19,7 +20,8 @@ import time
 import traceback
 
 from benchmarks import (bench_accuracy, bench_compression, bench_costmodel,
-                        bench_k_sweep, bench_kernels, bench_layerwise)
+                        bench_k_sweep, bench_kernels, bench_layerwise,
+                        bench_serving)
 
 MODULES = [
     ("compression", bench_compression.run),
@@ -28,6 +30,7 @@ MODULES = [
     ("layerwise", bench_layerwise.run),
     ("accuracy", bench_accuracy.run),
     ("kernels", bench_kernels.run),
+    ("serving", bench_serving.run),
 ]
 
 

@@ -77,10 +77,14 @@ def decode(a: SparqleActivation) -> jax.Array:
     return x.astype(jnp.int8)
 
 
-def subprecision_sparsity(x_int8: jax.Array) -> jax.Array:
-    """Fraction ``s`` of elements whose MSB4 is zero (i.e. value in [0, 15])."""
+def subprecision_sparsity(x_int8: jax.Array, axis=None) -> jax.Array:
+    """Fraction ``s`` of elements whose MSB4 is zero (i.e. value in [0, 15]).
+
+    ``axis`` as in ``jnp.mean``: None reduces to a scalar (the paper's
+    tensor-level s); ``axis=-1`` gives per-token sparsity for telemetry.
+    """
     msb4 = jnp.right_shift(x_int8.astype(jnp.int8), 4)
-    return jnp.mean((msb4 == 0).astype(jnp.float32))
+    return jnp.mean((msb4 == 0).astype(jnp.float32), axis=axis)
 
 
 def compression_percent(s: jax.Array | float, p: int = 8) -> jax.Array:

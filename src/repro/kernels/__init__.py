@@ -5,9 +5,16 @@
                        accelerator, iso-tiling)
   * sparqle_encode   — fused drain-path output quantize + decompose
   * kv_attention     — decode attention with in-VMEM unpack/dequant of the
-                       packed-int4 KV cache (flash-decoding structure)
+                       packed-int4 KV cache (flash-decoding structure);
+                       contiguous and paged (block-table) variants share
+                       one kernel body
 
 Each kernel ships with a pure-jnp oracle in ref.py and interpret-mode
 allclose sweeps in tests/test_kernels.py; ops.py holds the jit'd public
 wrappers (padding, backend dispatch).
 """
+from jax.experimental.pallas import tpu as _pltpu
+
+# jax < 0.6 names this TPUCompilerParams; one shim shared by all kernels
+CompilerParams = (getattr(_pltpu, "CompilerParams", None)
+                  or _pltpu.TPUCompilerParams)

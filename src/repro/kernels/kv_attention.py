@@ -14,6 +14,15 @@ Layout: one grid step handles one (batch, kv-head) pair and one cache
 block of ``bs`` tokens (innermost, 'arbitrary'): running max/denominator
 and the (G, hd) output accumulator live in VMEM scratch across the cache
 scan — the standard flash-decoding structure re-tiled for VMEM.
+
+Two cache layouts share the same kernel body:
+
+  * :func:`kv4_decode_attention`        — contiguous (B, S, KVH, …) cache;
+  * :func:`kv4_paged_decode_attention`  — a paged pool (P, page, KVH, …)
+    walked through a per-sequence block table (scalar-prefetched so the
+    page index feeds the DMA index map). Because the body, block shapes
+    and accumulation order are identical, the paged variant is bit-exact
+    against the contiguous one when the pages tile the same cache.
 """
 from __future__ import annotations
 
@@ -23,6 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import CompilerParams as _CompilerParams
 
 NEG_INF = -2.0e38
 
@@ -125,6 +136,76 @@ def kv4_decode_attention(
             pltpu.VMEM((g, hd), jnp.float32),    # output accumulator
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(pos, q, k_q, k_s, v_q, v_s)
+
+
+def _paged_kernel(bt_ref, pos_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref,
+                  out_ref, m_ref, l_ref, acc_ref, *, n_s, bs, scale):
+    # the block table only drives the index maps; the body is the shared
+    # flash-decoding step (bit-exact with the contiguous layout)
+    del bt_ref
+    _kernel(pos_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, out_ref,
+            m_ref, l_ref, acc_ref, n_s=n_s, bs=bs, scale=scale)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kv4_paged_decode_attention(
+    q: jax.Array,             # (B, KVH, G, hd) — grouped query heads
+    k_pages: jax.Array,       # (P, ps, KVH, hd//2) int8, packed nibbles
+    k_scale_pages: jax.Array, # (P, ps, KVH) f32 per-token-head scales
+    v_pages: jax.Array,       # (P, ps, KVH, hd//2) int8
+    v_scale_pages: jax.Array, # (P, ps, KVH) f32
+    block_tables: jax.Array,  # (B, Pmax) int32 — seq-order page ids
+    pos: jax.Array,           # (B,) int32 — current position (inclusive)
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Decode attention over a *paged* packed-KV4 pool.
+
+    ``block_tables[b, i]`` names the physical page holding sequence ``b``'s
+    tokens ``[i*ps, (i+1)*ps)``. Entries past the sequence's last page may
+    point anywhere (conventionally the null page 0): the absolute-position
+    causal mask ``i*ps + offset <= pos[b]`` discards them. The table is
+    scalar-prefetched so page ids are available to the DMA index maps —
+    the pool is only ever touched one page per grid step, in wire format.
+    """
+    b, kvh, g, hd = q.shape
+    n_pages, ps, _, hdp = k_pages.shape
+    _, n_s = block_tables.shape
+    assert hdp * 2 == hd, (hd, hdp)
+    scale = hd ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kvh, n_s),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ib, ih, isb, bt: (ib,)),        # pos
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda ib, ih, isb, bt: (ib, ih, 0, 0)),     # q
+            pl.BlockSpec((1, ps, 1, hdp),
+                         lambda ib, ih, isb, bt: (bt[ib, isb], 0, ih, 0)),
+            pl.BlockSpec((1, ps, 1),
+                         lambda ib, ih, isb, bt: (bt[ib, isb], 0, ih)),
+            pl.BlockSpec((1, ps, 1, hdp),
+                         lambda ib, ih, isb, bt: (bt[ib, isb], 0, ih, 0)),
+            pl.BlockSpec((1, ps, 1),
+                         lambda ib, ih, isb, bt: (bt[ib, isb], 0, ih)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda ib, ih, isb, bt: (ib, ih, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),     # running max
+            pltpu.VMEM((g, 1), jnp.float32),     # running denominator
+            pltpu.VMEM((g, hd), jnp.float32),    # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, n_s=n_s, bs=ps, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), q.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(block_tables, pos, q, k_pages, k_scale_pages, v_pages, v_scale_pages)

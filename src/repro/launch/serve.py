@@ -1,14 +1,19 @@
-"""Batched serving driver on the SPARQLe quantized path.
+"""Serving driver on the SPARQLe quantized path.
 
-Quantizes a (randomly initialized or checkpointed) model into SPARQLe
-served form (W4A8 + column-importance clipping + KV4 cache), prefills a
-batch of prompts, decodes N tokens, and reports the achieved MSB4
-sub-precision sparsity per projection class plus the analytical
-latency/energy improvement the cost model predicts at that sparsity —
-the same quantities the paper's §5.1 reports.
+Default: the continuous-batching engine (`repro.serving`) — requests are
+admitted FCFS under a token budget into a paged packed-KV4 cache pool,
+prefill is chunked, decode slots are backfilled every step, and decode
+attention streams the pool in wire format through the paged Pallas
+kernel. Reports per-request TTFT/TPOT, generation throughput, achieved
+MSB4 sub-precision sparsity, and the cost model's prediction at that
+sparsity (paper §5.1).
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --smoke \
         --prompt-len 64 --gen 16 --batch 4
+
+``--legacy`` runs the original fixed-batch path (one monolithic cache,
+single prefill + lockstep Python decode loop) for comparison; paged-vs-
+legacy token equivalence is covered by tests/test_serving.py.
 """
 from __future__ import annotations
 
@@ -34,6 +39,69 @@ from repro.models.schema import init_params
 from repro.models.schema_builder import build_schema
 
 
+def _legacy_serve(cfg, qparams, batch, plen, args) -> None:
+    max_len = plen + args.gen
+    prefill = jax.jit(S.make_serve_prefill(cfg, max_len))
+    decode = jax.jit(S.make_serve_decode(cfg))
+
+    t0 = time.time()
+    tok, cache = prefill(qparams, batch)
+    tok.block_until_ready()
+    t_prefill = time.time() - t0
+
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        pos = jnp.full((args.batch,), plen + i, jnp.int32)
+        tok, cache = decode(qparams, cache, tok, pos)
+        out.append(tok)
+    jax.block_until_ready(out[-1])
+    t_decode = (time.time() - t0) / max(1, args.gen - 1)
+
+    gen = jnp.stack(out, 1)
+    print(f"generated {gen.shape} tokens; "
+          f"prefill {t_prefill*1e3:.0f} ms, "
+          f"{t_decode*1e3:.1f} ms/token (CPU interpret timings)")
+
+
+def _engine_serve(cfg, qparams, prompts, args) -> None:
+    from repro.serving import (Engine, PoolConfig, SamplingParams,
+                               SchedulerConfig)
+    pages_per_seq = -(-(args.prompt_len + args.gen) // args.page_size)
+    n_pages = args.n_pages or (1 + pages_per_seq * args.batch)
+    eng = Engine(
+        cfg, qparams,
+        pool_config=PoolConfig(n_pages=n_pages, page_size=args.page_size),
+        sched_config=SchedulerConfig(
+            max_decode_batch=min(args.batch, args.decode_slots),
+            token_budget=args.token_budget,
+            prefill_chunk=args.prefill_chunk,
+            max_pages_per_seq=pages_per_seq))
+    t0 = time.time()
+    handles = [eng.submit(np.asarray(p).tolist(),
+                          SamplingParams(max_new_tokens=args.gen))
+               for p in prompts]
+    eng.run()
+    wall = time.time() - t0
+
+    stats = [h.stats() for h in handles]
+    n_tok = sum(s["n_generated"] for s in stats)
+    ttft = [s["ttft_s"] for s in stats]
+    tpot = [s["tpot_s"] for s in stats if np.isfinite(s["tpot_s"])]
+    spars = [s["act_sparsity"] for s in stats]
+    print(f"engine: {len(handles)} requests, {n_tok} tokens in "
+          f"{wall:.2f} s ({n_tok / wall:.1f} tok/s, "
+          f"{eng.steps} steps; CPU interpret timings)")
+    print(f"  TTFT  mean {np.mean(ttft)*1e3:.0f} ms  "
+          f"p95 {np.percentile(ttft, 95)*1e3:.0f} ms")
+    if tpot:
+        print(f"  TPOT  mean {np.mean(tpot)*1e3:.1f} ms/token")
+    print(f"  decode-time MSB4 sparsity mean {np.mean(spars)*100:.1f}%")
+    agg = eng.aggregate_stats()
+    print(f"  pool: {agg['pool_utilization']*100:.0f}% pages in use at "
+          f"drain, {agg['pool_evictions']} evictions")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -49,6 +117,15 @@ def main(argv=None) -> None:
     ap.add_argument("--ckpt", default=None,
                     help="restore float params from this checkpoint dir")
     ap.add_argument("--seed", type=int, default=0)
+    # engine knobs
+    ap.add_argument("--legacy", action="store_true",
+                    help="fixed-batch serving path (no engine)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="0 = size the pool to fit the whole batch")
+    ap.add_argument("--token-budget", type=int, default=128)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--decode-slots", type=int, default=8)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -60,8 +137,6 @@ def main(argv=None) -> None:
         params = init_params(build_schema(cfg), jax.random.PRNGKey(args.seed))
         if args.ckpt:
             latest = store.latest_step(args.ckpt)
-            state_like = S.TrainState(
-                params=params, opt=None)  # params-only restore
             params = store.restore(args.ckpt, latest,
                                    {"params": params})["params"]
         tile_k = 16 if args.smoke else 128
@@ -87,28 +162,15 @@ def main(argv=None) -> None:
             batch = {"tokens": prompts}
             plen = args.prompt_len
 
-        max_len = plen + args.gen
-        prefill = jax.jit(S.make_serve_prefill(cfg, max_len))
-        decode = jax.jit(S.make_serve_decode(cfg))
-
-        t0 = time.time()
-        tok, cache = prefill(qparams, batch)
-        tok.block_until_ready()
-        t_prefill = time.time() - t0
-
-        out = [tok]
-        t0 = time.time()
-        for i in range(args.gen - 1):
-            pos = jnp.full((args.batch,), plen + i, jnp.int32)
-            tok, cache = decode(qparams, cache, tok, pos)
-            out.append(tok)
-        jax.block_until_ready(out[-1])
-        t_decode = (time.time() - t0) / max(1, args.gen - 1)
-
-        gen = jnp.stack(out, 1)
-        print(f"generated {gen.shape} tokens; "
-              f"prefill {t_prefill*1e3:.0f} ms, "
-              f"{t_decode*1e3:.1f} ms/token (CPU interpret timings)")
+        if args.legacy:
+            _legacy_serve(cfg, qparams, batch, plen, args)
+        else:
+            try:
+                M.check_paged_support(cfg)
+            except NotImplementedError as e:
+                raise SystemExit(
+                    f"{e}\n(this arch serves via --legacy only)")
+            _engine_serve(cfg, qparams, list(np.asarray(prompts)), args)
 
         # achieved sub-precision sparsity of the hidden stream
         hidden = M.forward_hidden(cfg, qparams, batch)

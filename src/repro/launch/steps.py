@@ -230,6 +230,47 @@ def make_serve_decode(cfg: ModelConfig):
 
 
 # ---------------------------------------------------------------------------
+# continuous-batching engine steps (serving/engine.py) — paged KV pool
+# ---------------------------------------------------------------------------
+
+def make_engine_prefill_chunk(cfg: ModelConfig):
+    """Chunked prefill of ONE sequence into the paged pool.
+
+    (params, pool, tokens (1, C), start, valid, block_table (1, Pmax))
+    -> (logits (1, V) at the last valid position, new pool, sparsity).
+    Shape-static in C and Pmax, so the engine compiles this once.
+    """
+    def prefill_chunk(params, pool, tokens, start, valid, block_table):
+        return M.prefill_chunk_paged(cfg, params, pool, tokens, start,
+                                     valid, block_table)
+
+    return prefill_chunk
+
+
+def make_engine_decode(cfg: ModelConfig):
+    """One continuous-batching decode step over every decode slot.
+
+    (params, pool, token (B,), pos (B,), block_tables (B, Pmax))
+    -> (logits (B, V), new pool, per-slot hidden MSB4 sparsity (B,)).
+    Raw logits come back (not argmax'd): sampling policy is per-request
+    and lives host-side in the engine.
+    """
+    def engine_decode(params, pool, token, pos, block_tables):
+        return M.decode_step_paged(cfg, params, pool, token, pos,
+                                   block_tables)
+
+    return engine_decode
+
+
+def pool_abstract_and_shardings(cfg: ModelConfig, n_pages: int,
+                                page_size: int, mesh: Mesh):
+    """Dry-run plumbing for the serving pool (mirrors the cache helper)."""
+    from repro.serving.kv_pool import PoolConfig, pool_schema
+    ps = pool_schema(cfg, PoolConfig(n_pages=n_pages, page_size=page_size))
+    return tree_abstract(ps), tree_shardings(ps, mesh)
+
+
+# ---------------------------------------------------------------------------
 # abstract state + shardings (dry-run / launcher plumbing)
 # ---------------------------------------------------------------------------
 

@@ -454,14 +454,18 @@ def _apply_layer_full(cfg, ld: LayerDef, p: Params, x, positions,
     return x, cache, aux
 
 
+def _apply_ffn_decode(cfg, ld: LayerDef, p: Params, x):
+    """Single-token FFN residual, shared by every decode cache layout."""
+    if ld.ffn == "dense":
+        return x + dense_ffn(cfg, p, x[:, None, :])[:, 0]
+    if ld.ffn == "moe":
+        return x + moe_ffn(cfg, p, x[:, None, :])[0][:, 0]
+    return x
+
+
 def _apply_layer_decode(cfg, ld: LayerDef, p: Params, x, cache, pos):
     y, cache = _MIXER_DEC[ld.mixer](cfg, ld, p, x, cache, pos)
-    x = x + y
-    if ld.ffn == "dense":
-        x = x + dense_ffn(cfg, p, x[:, None, :])[:, 0]
-    elif ld.ffn == "moe":
-        x = x + moe_ffn(cfg, p, x[:, None, :])[0][:, 0]
-    return x, cache
+    return _apply_ffn_decode(cfg, ld, p, x + y), cache
 
 
 def _stage_scan_full(cfg, stage: Stage, sparams, x, positions, prefix_len,
@@ -595,6 +599,224 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Cache,
         new_cache["stages"][f"s{si}"] = nc
     logits = head_logits(cfg, params, x[:, None, :])[:, 0]
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# paged-cache serving entry points (serving/engine.py)
+#
+# The contiguous decode path above owns a (B, Smax, ...) cache per layer;
+# the serving engine instead owns a shared page pool per layer —
+# (n_pages, page_size, KVH, ...) in the same packed-int4 wire format —
+# and per-sequence block tables mapping sequence-order page steps to
+# physical pages. KV is quantized on write and never dequantized in HBM
+# on the decode hot path (kernels/kv_attention.py walks the table).
+# ---------------------------------------------------------------------------
+
+
+def check_paged_support(cfg: ModelConfig) -> None:
+    """Raise unless every layer fits the paged attention serving path."""
+    if cfg.family in ("encoder", "vlm"):
+        raise NotImplementedError(
+            f"paged serving needs a token-only decoder, got {cfg.family}")
+    if cfg.kv_bits != 4 or cfg.hd % 2:
+        raise NotImplementedError(
+            f"paged pool stores packed int4 KV: kv_bits=4, even head_dim "
+            f"required (got kv_bits={cfg.kv_bits}, hd={cfg.hd})")
+    for stage in build_stages(cfg):
+        for ld in stage.period:
+            if ld.mixer != "attn" or ld.window:
+                raise NotImplementedError(
+                    f"paged serving supports full-attention GQA layers only "
+                    f"(got mixer={ld.mixer!r}, window={ld.window})")
+
+
+def _act_subprecision_sparsity(x: jax.Array) -> jax.Array:
+    """Per-row MSB4 sparsity of the int8-quantized activations (B,)."""
+    from repro.core.quantize import quantize_activations
+    from repro.core.sparqle import subprecision_sparsity
+    q = quantize_activations(x, bits=8, per_token=True).q
+    return subprecision_sparsity(q, axis=-1)
+
+
+def attn_decode_paged(cfg: ModelConfig, ld: LayerDef, p: Params,
+                      x: jax.Array, pool: Cache, block_tables: jax.Array,
+                      pos: jax.Array) -> Tuple[jax.Array, Cache]:
+    """One-token attention against the paged pool. x: (B, D).
+
+    Writes the new token's quantized K/V into its page slot, then attends
+    through the block table with the paged Pallas kernel (the pool stays
+    in packed-int4 wire format end to end).
+    """
+    from repro.kernels.kv_attention import kv4_paged_decode_attention
+    b, d = x.shape
+    kvh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    theta = ld.rope_theta or cfg.rope_theta
+    h = _norm(cfg, p["ln"], x)
+    q, k_new, v_new = _attn_qkv(cfg, p, h, pos, theta)
+    kq, ks = _kv_quant(cfg, k_new)
+    vq, vs = _kv_quant(cfg, v_new)
+    ps = pool["k_q"].shape[1]
+    n_steps = block_tables.shape[1]
+    bidx = jnp.arange(b)
+    page = block_tables[bidx, jnp.clip(pos // ps, 0, n_steps - 1)]
+    off = pos % ps
+    pool = {
+        "k_q": pool["k_q"].at[page, off].set(kq),
+        "k_s": pool["k_s"].at[page, off].set(ks),
+        "v_q": pool["v_q"].at[page, off].set(vq),
+        "v_s": pool["v_s"].at[page, off].set(vs),
+    }
+    o = kv4_paged_decode_attention(
+        q.reshape(b, kvh, g, cfg.hd), pool["k_q"], pool["k_s"],
+        pool["v_q"], pool["v_s"], block_tables, pos)
+    o = o.reshape(b, cfg.n_heads * cfg.hd)
+    return linear(o, p["wo"], p.get("bo")), pool
+
+
+def _apply_layer_decode_paged(cfg, ld: LayerDef, p: Params, x, pool,
+                              block_tables, pos):
+    y, pool = attn_decode_paged(cfg, ld, p, x, pool, block_tables, pos)
+    return _apply_ffn_decode(cfg, ld, p, x + y), pool
+
+
+def decode_step_paged(cfg: ModelConfig, params: Params, pool: Cache,
+                      token: jax.Array, pos: jax.Array,
+                      block_tables: jax.Array
+                      ) -> Tuple[jax.Array, Cache, jax.Array]:
+    """One continuous-batching decode step over the paged pool.
+
+    token/pos (B,) int32, block_tables (B, Pmax) int32. Inactive slots
+    should carry an all-zero block-table row: their KV writes land in the
+    reserved null page 0 and their outputs are discarded by the engine.
+    Returns (logits (B, V), new pool, per-slot hidden MSB4 sparsity (B,)).
+    """
+    dt = cfg.cdtype
+    x = embed(token, params["embed"]["table"]).astype(dt)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    x = constrain(x, ("batch", "embed"))
+    new_pool: Cache = {"stages": {}}
+    for si, stage in enumerate(build_stages(cfg)):
+        def body(h, inp, stage=stage):
+            pslice, cslice = inp
+            new_c = {}
+            for pi, ld in enumerate(stage.period):
+                h, c = _apply_layer_decode_paged(
+                    cfg, ld, pslice[f"p{pi}"], h, cslice[f"p{pi}"],
+                    block_tables, pos)
+                new_c[f"p{pi}"] = c
+            return h, new_c
+
+        x, nc = jax.lax.scan(body, x, (params["stages"][f"s{si}"],
+                                       pool["stages"][f"s{si}"]))
+        new_pool["stages"][f"s{si}"] = nc
+    sparsity = _act_subprecision_sparsity(x)
+    logits = head_logits(cfg, params, x[:, None, :])[:, 0]
+    return logits, new_pool, sparsity
+
+
+def _attn_prefill_chunk_paged(cfg: ModelConfig, ld: LayerDef, p: Params,
+                              x: jax.Array, pool: Cache,
+                              block_table: jax.Array, start: jax.Array,
+                              valid: jax.Array) -> Tuple[jax.Array, Cache]:
+    """Chunked-prefill attention for ONE sequence. x: (1, C, D).
+
+    The chunk's K/V are quantized and scattered into the sequence's pages;
+    queries attend to the dequantized pool for positions < start (the wire
+    format is the source of truth for past context) and to the float
+    chunk K/V for the chunk itself — so a single-chunk prefill is exactly
+    the legacy float prefill attention.
+    """
+    _, c, _ = x.shape
+    kvh, g, hd = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.hd
+    theta = ld.rope_theta or cfg.rope_theta
+    h = _norm(cfg, p["ln"], x)
+    positions = start + jnp.arange(c)
+    q, k, v = _attn_qkv(cfg, p, h, positions, theta)
+
+    ps = pool["k_q"].shape[1]
+    n_steps = block_table.shape[1]
+    kq, ks = _kv_quant(cfg, k)
+    vq, vs = _kv_quant(cfg, v)
+    valid_tok = jnp.arange(c) < valid
+    page = jnp.where(valid_tok,
+                     block_table[0, jnp.clip(positions // ps, 0,
+                                             n_steps - 1)], 0)
+    off = positions % ps
+    pool = {
+        "k_q": pool["k_q"].at[page, off].set(kq[0]),
+        "k_s": pool["k_s"].at[page, off].set(ks[0]),
+        "v_q": pool["v_q"].at[page, off].set(vq[0]),
+        "v_s": pool["v_s"].at[page, off].set(vs[0]),
+    }
+
+    # context = dequantized pool pages [0, start) ++ float chunk K/V
+    kp = pool["k_q"][block_table[0]].reshape(n_steps * ps, kvh, hd // 2)
+    ksp = pool["k_s"][block_table[0]].reshape(n_steps * ps, kvh)
+    vp = pool["v_q"][block_table[0]].reshape(n_steps * ps, kvh, hd // 2)
+    vsp = pool["v_s"][block_table[0]].reshape(n_steps * ps, kvh)
+    k_past = _kv_dequant(cfg, kp, ksp, jnp.float32)[None]
+    v_past = _kv_dequant(cfg, vp, vsp, jnp.float32)[None]
+    k_cat = jnp.concatenate([k_past, k.astype(jnp.float32)], 1)
+    v_cat = jnp.concatenate([v_past, v.astype(jnp.float32)], 1)
+
+    lmax = n_steps * ps
+    i = jnp.arange(c)[:, None]
+    j = jnp.arange(lmax + c)[None, :]
+    allow = jnp.where(j < lmax, j < start, (j - lmax) <= i)
+    qg = q.reshape(1, c, kvh, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bikgd,bjkd->bkgij", qg, k_cat) * hd ** -0.5
+    s = jnp.where(allow[None, None, None], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgij,bjkd->bikgd", pr, v_cat)
+    o = o.reshape(1, c, cfg.n_heads * hd).astype(x.dtype)
+    return linear(o, p["wo"], p.get("bo")), pool
+
+
+def prefill_chunk_paged(cfg: ModelConfig, params: Params, pool: Cache,
+                        tokens: jax.Array, start: jax.Array,
+                        valid: jax.Array, block_table: jax.Array
+                        ) -> Tuple[jax.Array, Cache, jax.Array]:
+    """Prefill one chunk of ONE sequence into the paged pool.
+
+    tokens (1, C) int32 (tail-padded; ``valid`` counts real tokens),
+    start — absolute position of tokens[0, 0], block_table (1, Pmax).
+    Returns (logits (1, V) of the last valid position, new pool, mean MSB4
+    sparsity of the chunk's hidden activations).
+    """
+    dt = cfg.cdtype
+    x = embed(tokens, params["embed"]["table"]).astype(dt)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    x = constrain(x, ("batch", "seq", "embed"))
+    new_pool: Cache = {"stages": {}}
+    for si, stage in enumerate(build_stages(cfg)):
+        def body(h, inp, stage=stage):
+            pslice, cslice = inp
+            new_c = {}
+            for pi, ld in enumerate(stage.period):
+                y, c = _attn_prefill_chunk_paged(
+                    cfg, ld, pslice[f"p{pi}"], h, cslice[f"p{pi}"],
+                    block_table, start, valid)
+                h = h + y
+                if ld.ffn == "dense":
+                    h = h + dense_ffn(cfg, pslice[f"p{pi}"], h)
+                elif ld.ffn == "moe":
+                    h = h + moe_ffn(cfg, pslice[f"p{pi}"], h)[0]
+                new_c[f"p{pi}"] = c
+            return h, new_c
+
+        x, nc = jax.lax.scan(body, x, (params["stages"][f"s{si}"],
+                                       pool["stages"][f"s{si}"]))
+        new_pool["stages"][f"s{si}"] = nc
+    last = jnp.maximum(valid - 1, 0)
+    valid_tok = (jnp.arange(tokens.shape[1]) < valid).astype(jnp.float32)
+    sp_tok = _act_subprecision_sparsity(x[0])
+    sparsity = jnp.sum(sp_tok * valid_tok) / jnp.maximum(
+        jnp.sum(valid_tok), 1.0)
+    x_last = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
+    logits = head_logits(cfg, params, x_last)[:, 0]
+    return logits, new_pool, sparsity
 
 
 # ---------------------------------------------------------------------------

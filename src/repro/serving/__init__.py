@@ -1,0 +1,16 @@
+"""Continuous-batching serving over a paged packed-KV4 cache pool.
+
+  * kv_pool    — paged pool in the SPARQLe cache wire format (free-list
+                 allocation, null page, eviction hooks, MSB telemetry)
+  * scheduler  — FCFS continuous batching: token budget, chunked prefill,
+                 decode-slot backfill, recompute-style preemption
+  * engine     — the serving loop: submit() / stream() / run() over two
+                 shape-static jitted steps (see docs/serving.md)
+"""
+from repro.serving.engine import Engine
+from repro.serving.kv_pool import PagedKVPool, PoolConfig
+from repro.serving.scheduler import (Request, SamplingParams, Scheduler,
+                                     SchedulerConfig)
+
+__all__ = ["Engine", "PagedKVPool", "PoolConfig", "Request",
+           "SamplingParams", "Scheduler", "SchedulerConfig"]

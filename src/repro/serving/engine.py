@@ -1,0 +1,182 @@
+"""Continuous-batching serving engine over the paged packed-KV4 pool.
+
+Ties together the scheduler (admission / chunked prefill / decode batch
+formation), the page pool (wire-format KV storage), and two jitted step
+functions (launch/steps.py):
+
+  * ``prefill_chunk`` — one (1, prefill_chunk) slice of one prompt;
+  * ``decode``        — one token for every decode slot at once, through
+    the paged decode-attention Pallas kernel.
+
+Both are shape-static (chunk width, decode batch width, block-table
+width), so the whole serving loop compiles exactly twice. Inactive
+decode slots ride along pointing at the pool's null page.
+
+    eng = Engine(cfg, qparams)
+    h = eng.submit([1, 2, 3], SamplingParams(max_new_tokens=8))
+    for tok in eng.stream(h):
+        ...
+    print(h.stats())
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import check_paged_support
+from repro.serving.kv_pool import PagedKVPool, PoolConfig
+from repro.serving.scheduler import (FINISHED, Request, SamplingParams,
+                                     Scheduler, SchedulerConfig)
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params,
+                 pool_config: Optional[PoolConfig] = None,
+                 sched_config: Optional[SchedulerConfig] = None,
+                 clock=time.monotonic):
+        from repro.launch import steps as S
+        check_paged_support(cfg)
+        self.cfg = cfg
+        self.params = params
+        self.pool = PagedKVPool(cfg, pool_config or PoolConfig())
+        self.sched = Scheduler(self.pool, sched_config or SchedulerConfig())
+        self._clock = clock
+        scfg = self.sched.cfg
+        self._chunk = scfg.prefill_chunk
+        self._n_slots = scfg.max_decode_batch
+        self._n_page_steps = scfg.max_pages_per_seq
+        # donate the pool state: the old pages buffer is dead the moment a
+        # step returns, and without aliasing every token would copy the
+        # whole pool (exactly the HBM traffic the paged design removes)
+        self._prefill_fn = jax.jit(S.make_engine_prefill_chunk(cfg),
+                                   donate_argnums=(1,))
+        self._decode_fn = jax.jit(S.make_engine_decode(cfg),
+                                  donate_argnums=(1,))
+        self._rngs: Dict[int, np.random.Generator] = {}
+        self.steps = 0
+
+    # -- public API --------------------------------------------------------
+
+    def submit(self, prompt: List[int],
+               sampling: SamplingParams = SamplingParams()) -> Request:
+        """Enqueue a request; returns its handle (tokens land on
+        ``handle.out_tokens`` as the engine steps)."""
+        return self.sched.submit([int(t) for t in prompt], sampling,
+                                 self._clock())
+
+    def stream(self, req: Request) -> Iterator[int]:
+        """Drive the engine until ``req`` finishes, yielding its tokens
+        as they are produced (other in-flight requests progress too)."""
+        seen = 0
+        while True:
+            while seen < len(req.out_tokens):
+                yield req.out_tokens[seen]
+                seen += 1
+            if req.done:
+                return
+            self.step()
+
+    def run(self, max_steps: int = 100_000) -> None:
+        """Step until every submitted request has finished."""
+        for _ in range(max_steps):
+            if not self.sched.has_work():
+                return
+            self.step()
+        raise RuntimeError(f"engine did not drain in {max_steps} steps")
+
+    def step(self) -> List[Tuple[int, int]]:
+        """One scheduler iteration. Returns [(rid, token), ...] emitted."""
+        plan = self.sched.schedule()
+        events: List[Tuple[int, int]] = []
+        for req, start, n in plan.prefill:
+            events.extend(self._run_prefill_chunk(req, start, n))
+        if plan.decode:
+            events.extend(self._run_decode(plan.decode))
+        self.steps += 1
+        return events
+
+    def aggregate_stats(self) -> Dict[str, float]:
+        """Pool-level counters to pair with per-request ``req.stats()``."""
+        return {
+            "steps": self.steps,
+            "pool_pages_free": self.pool.num_free,
+            "pool_utilization": self.pool.utilization(),
+            "pool_evictions": self.pool.evictions,
+        }
+
+    # -- internals ---------------------------------------------------------
+
+    def _block_table_row(self, req: Request) -> np.ndarray:
+        row = np.zeros((self._n_page_steps,), np.int32)
+        pages = self.pool.pages_of(req.rid)
+        row[:len(pages)] = pages
+        return row
+
+    def _sample(self, req: Request, logits: np.ndarray) -> int:
+        t = req.sampling.temperature
+        if t <= 0.0:
+            return int(np.argmax(logits))
+        rng = self._rngs.setdefault(
+            req.rid, np.random.default_rng(req.sampling.seed + req.rid))
+        z = (logits.astype(np.float64) - logits.max()) / t
+        p = np.exp(z)
+        p /= p.sum()
+        return int(rng.choice(len(p), p=p))
+
+    def _emit(self, req: Request, token: int) -> Optional[Tuple[int, int]]:
+        now = self._clock()
+        if req.t_first is None:
+            req.t_first = now
+        req.t_last = now
+        req.context.append(token)
+        req.out_tokens.append(token)
+        s = req.sampling
+        if (req.n_generated >= s.max_new_tokens or
+                (s.stop_token is not None and token == s.stop_token)):
+            self.sched.finish(req)
+            self._rngs.pop(req.rid, None)
+        return (req.rid, token)
+
+    def _run_prefill_chunk(self, req: Request, start: int,
+                           n: int) -> List[Tuple[int, int]]:
+        toks = np.zeros((1, self._chunk), np.int32)
+        toks[0, :n] = req.context[start:start + n]
+        logits, self.pool.state, sparsity = self._prefill_fn(
+            self.params, self.pool.state, jnp.asarray(toks),
+            jnp.asarray(start, jnp.int32), jnp.asarray(n, jnp.int32),
+            jnp.asarray(self._block_table_row(req))[None])
+        req.sparsity_sum += float(sparsity) * n
+        req.sparsity_n += n
+        if not self.sched.prefill_advanced(req, n):
+            return []
+        self.sched.to_running(req)
+        ev = self._emit(req, self._sample(req, np.asarray(logits[0])))
+        return [ev] if ev else []
+
+    def _run_decode(self, decode: List[Request]) -> List[Tuple[int, int]]:
+        B = self._n_slots
+        token = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        tables = np.zeros((B, self._n_page_steps), np.int32)
+        for req in decode:
+            token[req.slot] = req.context[-1]
+            pos[req.slot] = len(req.context) - 1
+            tables[req.slot] = self._block_table_row(req)
+        logits, self.pool.state, sparsity = self._decode_fn(
+            self.params, self.pool.state, jnp.asarray(token),
+            jnp.asarray(pos), jnp.asarray(tables))
+        logits = np.asarray(logits)
+        sparsity = np.asarray(sparsity)
+        events = []
+        for req in decode:
+            req.sparsity_sum += float(sparsity[req.slot])
+            req.sparsity_n += 1
+            ev = self._emit(req, self._sample(req, logits[req.slot]))
+            if ev:
+                events.append(ev)
+        return events

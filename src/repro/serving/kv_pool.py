@@ -1,0 +1,183 @@
+"""Paged packed-KV4 cache pool (the serving engine's memory subsystem).
+
+The pool owns, per transformer layer, a shared slab of fixed-size pages in
+the SPARQLe cache wire format — K/V int4 nibbles packed two-per-byte plus
+per-token-head f32 scales — exactly the layout the contiguous decode
+kernel already streams (`kernels/kv_attention.py`). Sequences map onto
+pages through per-request block tables, so cache capacity is pooled
+across all in-flight requests instead of pre-reserved per batch slot:
+admission is bounded by *pages*, not by a worst-case max_len rectangle.
+
+Page 0 is reserved as the *null page*: inactive decode slots and padded
+prefill tokens write there, which keeps every jitted step shape-static
+without masking scatter ops. It is never allocated to a request.
+
+Host-side state (free list, ownership, eviction counters) lives here;
+the device-side page arrays are a pytree (`state`) threaded through the
+jitted prefill/decode steps by the engine.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import check_paged_support
+from repro.models.schema import ParamSpec, Schema
+from repro.models.stages import build_stages
+
+NULL_PAGE = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    n_pages: int = 64        # physical pages, including the reserved null page
+    page_size: int = 16      # tokens per page
+
+
+def pool_schema(cfg: ModelConfig, pool: PoolConfig) -> Schema:
+    """ParamSpec tree of the device pool state (shardings derivable).
+
+    Mirrors `registry.cache_schema` but replaces the per-sequence
+    (batch, max_len) rectangle with the shared (n_pages, page_size) slab.
+    """
+    check_paged_support(cfg)
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    np_, ps = pool.n_pages, pool.page_size
+
+    def layer_pool() -> Schema:
+        return {
+            "k_q": ParamSpec((np_, ps, kvh, hd // 2),
+                             (None, None, "kv_heads", None),
+                             jnp.int8, init="zeros"),
+            "k_s": ParamSpec((np_, ps, kvh), (None, None, "kv_heads"),
+                             jnp.float32, init="ones"),
+            "v_q": ParamSpec((np_, ps, kvh, hd // 2),
+                             (None, None, "kv_heads", None),
+                             jnp.int8, init="zeros"),
+            "v_s": ParamSpec((np_, ps, kvh), (None, None, "kv_heads"),
+                             jnp.float32, init="ones"),
+        }
+
+    def stack(tree: Schema, repeat: int) -> Schema:
+        return {k: ParamSpec((repeat,) + v.shape, ("layers",) + v.axes,
+                             v.dtype, v.init, v.scale)
+                for k, v in tree.items()}
+
+    stages: Schema = {}
+    for si, stage in enumerate(build_stages(cfg)):
+        stages[f"s{si}"] = {f"p{pi}": stack(layer_pool(), stage.repeat)
+                            for pi, _ in enumerate(stage.period)}
+    return {"stages": stages}
+
+
+def init_pool_state(cfg: ModelConfig, pool: PoolConfig):
+    """Materialize the device page arrays (zeros; scales one)."""
+    def leaf(spec: ParamSpec):
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, spec.dtype)
+        return jnp.zeros(spec.shape, spec.dtype)
+    return jax.tree_util.tree_map(
+        leaf, pool_schema(cfg, pool),
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+class PagedKVPool:
+    """Free-list page allocator over the device pool state.
+
+    ``on_evict(owner, pages)`` fires when :meth:`evict` reclaims a live
+    owner's pages (the scheduler's preemption hook).
+    """
+
+    def __init__(self, cfg: ModelConfig, pool_cfg: PoolConfig):
+        if pool_cfg.n_pages < 2:
+            raise ValueError("need at least one page beyond the null page")
+        self.cfg = cfg
+        self.pool_cfg = pool_cfg
+        self.state = init_pool_state(cfg, pool_cfg)
+        self._free = collections.deque(range(1, pool_cfg.n_pages))
+        self._owned: Dict[object, List[int]] = {}
+        self.evictions = 0
+        self.on_evict: Optional[Callable[[object, List[int]], None]] = None
+
+    # -- capacity ----------------------------------------------------------
+
+    @property
+    def page_size(self) -> int:
+        return self.pool_cfg.page_size
+
+    @property
+    def n_usable_pages(self) -> int:
+        return self.pool_cfg.n_pages - 1          # minus the null page
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def pages_of(self, owner) -> List[int]:
+        return list(self._owned.get(owner, ()))
+
+    # -- allocation --------------------------------------------------------
+
+    def allocate(self, n: int, owner) -> Optional[List[int]]:
+        """Pop ``n`` pages for ``owner``; None (no partial grab) if short."""
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            return None
+        pages = [self._free.popleft() for _ in range(n)]
+        self._owned.setdefault(owner, []).extend(pages)
+        return pages
+
+    def release(self, owner) -> List[int]:
+        """Return all of ``owner``'s pages to the free list."""
+        pages = self._owned.pop(owner, [])
+        self._free.extend(pages)
+        return pages
+
+    def evict(self, owner) -> List[int]:
+        """Preemption hook: reclaim a live owner's pages (and tell them)."""
+        pages = self.pages_of(owner)
+        if pages and self.on_evict is not None:
+            self.on_evict(owner, pages)
+        self.evictions += 1
+        return self.release(owner)
+
+    # -- telemetry ---------------------------------------------------------
+
+    def page_msb_sparsity(self, pages: List[int]) -> np.ndarray:
+        """Per-page sub-precision sparsity of the stored int4 nibbles.
+
+        The 4-bit analogue of the paper's MSB4 criterion (int8 value with
+        zero high nibble): fraction of cached K/V nibbles whose high two
+        bits are zero, i.e. values already representable in 2 bits — the
+        headroom a sub-precision cache stream would exploit. Averaged
+        over K and V across every layer.
+        """
+        if not pages:
+            return np.zeros((0,), np.float32)
+        idx = jnp.asarray(pages, jnp.int32)
+        tot = None
+        cnt = 0
+        for path, leaf in jax.tree_util.tree_leaves_with_path(self.state):
+            name = path[-1].key if hasattr(path[-1], "key") else ""
+            if not name.endswith("_q"):
+                continue
+            sel = leaf[:, idx]                       # (L, n, ps, kvh, hd/2)
+            lo = jnp.right_shift(jnp.left_shift(sel, 4), 4)
+            hi = jnp.right_shift(sel, 4)
+            nib = jnp.stack([lo, hi], -1)
+            sub = (jnp.right_shift(nib, 2) == 0)
+            per_page = jnp.mean(sub.astype(jnp.float32),
+                                axis=(0, 2, 3, 4, 5))  # -> (n,)
+            tot = per_page if tot is None else tot + per_page
+            cnt += 1
+        return np.asarray(tot / max(cnt, 1), np.float32)
+
+    def utilization(self) -> float:
+        return 1.0 - self.num_free / max(self.n_usable_pages, 1)

@@ -1,0 +1,258 @@
+"""Continuous-batching scheduler: FCFS admission under a token budget.
+
+Every engine step the scheduler emits a :class:`StepPlan`:
+
+  * ``decode``  — the running requests (one token each). Before planning,
+    each running request that crosses a page boundary gets one new page;
+    if the pool is out of pages, the *youngest* running request is
+    preempted (recompute-style: its pages are evicted and it re-enters
+    the waiting queue with its generated tokens folded into the prompt).
+  * ``prefill`` — FCFS chunks of waiting prompts, bounded by the step's
+    remaining token budget, free decode slots, and free pages. Chunked
+    prefill lets a long prompt share steps with in-flight decodes instead
+    of stalling them.
+
+Decode-batch slots are backfilled every step: a request finishing at step
+t frees its slot and pages for a waiting request's prefill at step t+1.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import List, Optional, Tuple
+
+from repro.serving.kv_pool import PagedKVPool
+
+WAITING, PREFILL, RUNNING, FINISHED = ("waiting", "prefill", "running",
+                                       "finished")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    max_new_tokens: int = 16
+    temperature: float = 0.0          # 0 -> greedy
+    seed: int = 0
+    stop_token: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_decode_batch: int = 8        # decode slots (jitted batch width)
+    token_budget: int = 64           # tokens processed per engine step
+    prefill_chunk: int = 32          # tokens per prefill call (jit shape)
+    max_pages_per_seq: int = 16      # block-table width (jit shape)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    sampling: SamplingParams
+    arrival: float
+    context: List[int] = dataclasses.field(default_factory=list)
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    prefilled: int = 0
+    status: str = WAITING
+    slot: Optional[int] = None
+    # stats
+    t_first: Optional[float] = None
+    t_last: Optional[float] = None
+    sparsity_sum: float = 0.0
+    sparsity_n: int = 0
+    preemptions: int = 0
+
+    def __post_init__(self):
+        if not self.context:
+            self.context = list(self.prompt)
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.out_tokens)
+
+    @property
+    def done(self) -> bool:
+        return self.status == FINISHED
+
+    def stats(self) -> dict:
+        ttft = (self.t_first - self.arrival
+                if self.t_first is not None else float("nan"))
+        if self.t_first is not None and self.n_generated > 1:
+            tpot = (self.t_last - self.t_first) / (self.n_generated - 1)
+        else:
+            tpot = float("nan")
+        return {
+            "ttft_s": ttft,
+            "tpot_s": tpot,
+            "n_generated": self.n_generated,
+            "act_sparsity": (self.sparsity_sum / self.sparsity_n
+                             if self.sparsity_n else float("nan")),
+            "preemptions": self.preemptions,
+        }
+
+
+@dataclasses.dataclass
+class StepPlan:
+    prefill: List[Tuple[Request, int, int]]   # (request, start, n_tokens)
+    decode: List[Request]
+
+    @property
+    def empty(self) -> bool:
+        return not self.prefill and not self.decode
+
+
+class Scheduler:
+    def __init__(self, pool: PagedKVPool, cfg: SchedulerConfig):
+        self.pool = pool
+        self.cfg = cfg
+        self.waiting: collections.deque[Request] = collections.deque()
+        self.running: List[Request] = []
+        self._free_slots = list(range(cfg.max_decode_batch))
+        self._rid = itertools.count()
+
+    # -- intake ------------------------------------------------------------
+
+    def submit(self, prompt: List[int], sampling: SamplingParams,
+               arrival: float) -> Request:
+        cap = self.cfg.max_pages_per_seq * self.pool.page_size
+        need = len(prompt) + sampling.max_new_tokens
+        if need > cap:
+            raise ValueError(
+                f"request needs {need} token slots but the block table "
+                f"caps a sequence at {cap} "
+                f"(max_pages_per_seq * page_size)")
+        if need > self.pool.n_usable_pages * self.pool.page_size:
+            raise ValueError(
+                f"request needs {need} token slots; pool holds only "
+                f"{self.pool.n_usable_pages * self.pool.page_size}")
+        if not prompt:
+            raise ValueError("empty prompt")
+        if sampling.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        req = Request(rid=next(self._rid), prompt=list(prompt),
+                      sampling=sampling, arrival=arrival)
+        self.waiting.append(req)
+        return req
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # -- lifecycle hooks (called by the engine) ----------------------------
+
+    def prefill_advanced(self, req: Request, n: int) -> bool:
+        """Account ``n`` prefilled tokens; True when the prompt is done."""
+        req.prefilled += n
+        return req.prefilled >= len(req.context)
+
+    def to_running(self, req: Request) -> None:
+        if req in self.waiting:
+            self.waiting.remove(req)
+        req.status = RUNNING
+        self.running.append(req)
+
+    def finish(self, req: Request) -> None:
+        req.status = FINISHED
+        if req in self.running:
+            self.running.remove(req)
+        if req in self.waiting:
+            self.waiting.remove(req)
+        if req.slot is not None:
+            self._free_slots.append(req.slot)
+            req.slot = None
+        self.pool.release(req.rid)
+
+    def preempt(self, req: Request) -> None:
+        """Recompute-style preemption: evict pages, fold generated tokens
+        into the prompt, and re-queue at the head of the waiting line."""
+        self.pool.evict(req.rid)
+        req.preemptions += 1
+        req.prefilled = 0
+        if req in self.running:
+            self.running.remove(req)
+        if req in self.waiting:
+            self.waiting.remove(req)
+        req.status = WAITING
+        # re-enter in arrival order so FCFS priority survives preemption
+        idx = next((i for i, r in enumerate(self.waiting)
+                    if (r.arrival, r.rid) > (req.arrival, req.rid)),
+                   len(self.waiting))
+        self.waiting.insert(idx, req)
+
+    # -- planning ----------------------------------------------------------
+
+    def _pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.pool.page_size)      # ceil div
+
+    def _ensure_decode_page(self, req: Request) -> bool:
+        """Grow the block table to cover this step's write position."""
+        pos = len(req.context) - 1
+        need = self._pages_needed(pos + 1)
+        have = len(self.pool.pages_of(req.rid))
+        if need <= have:
+            return True
+        grown = self.pool.allocate(need - have, req.rid)
+        return grown is not None
+
+    def schedule(self) -> StepPlan:
+        plan = StepPlan(prefill=[], decode=[])
+
+        # 1. decode set — grow pages, preempting the youngest on pressure.
+        # The victim can be OLDER than the request that hit pressure (when
+        # that request is itself the youngest), so the decode list is only
+        # finalized after every grow/preempt has settled.
+        for req in sorted(self.running, key=lambda r: (r.arrival, r.rid)):
+            if req.status != RUNNING:
+                continue
+            while not self._ensure_decode_page(req):
+                victims = [r for r in self.running
+                           if r is not req and r.status == RUNNING]
+                # mid-prefill waiters hold pages too — fair game, they
+                # haven't produced a token yet
+                victims += [r for r in self.waiting
+                            if r is not req and self.pool.pages_of(r.rid)]
+                victim = max(victims, key=lambda r: (r.arrival, r.rid),
+                             default=None)
+                if victim is None:
+                    # sole page-holder and out of pages: self-preempt is
+                    # pointless — submit() guaranteed a lone request fits
+                    raise RuntimeError("page pool exhausted by one request")
+                self.preempt(victim)
+        plan.decode = [r for r in sorted(self.running,
+                                         key=lambda r: (r.arrival, r.rid))
+                       if r.status == RUNNING]
+
+        # 2. prefill — FCFS chunks under the remaining token budget
+        budget = self.cfg.token_budget - len(plan.decode)
+        for req in list(self.waiting):
+            if budget <= 0:
+                break
+            if req.slot is None:
+                if not self._free_slots:
+                    break                 # no decode slot to admit into
+                req.slot = self._free_slots.pop(0)
+            target = len(req.context)
+            chunk = min(self.cfg.prefill_chunk, target - req.prefilled,
+                        budget)
+            need = self._pages_needed(req.prefilled + chunk)
+            have = len(self.pool.pages_of(req.rid))
+            if need > have:
+                if self.pool.allocate(need - have, req.rid) is None:
+                    break                 # pool pressure: wait for frees
+            req.status = PREFILL
+            plan.prefill.append((req, req.prefilled, chunk))
+            budget -= chunk
+            if req.prefilled + chunk < target:
+                break                     # head still mid-prompt: stay FCFS
+
+        # 3. gridlock breaker: every request is mid-prefill holding pages
+        # and nobody can move — evict the youngest page-holder so the
+        # oldest can finish (only reachable under multi-request pressure)
+        if plan.empty and self.has_work() and not self.running:
+            holders = [r for r in self.waiting
+                       if self.pool.pages_of(r.rid)]
+            if len(holders) > 1:
+                self.preempt(max(holders, key=lambda r: (r.arrival, r.rid)))
+                return self.schedule()
+            raise RuntimeError(
+                "scheduler gridlock: pool too small for the waiting work")
+        return plan

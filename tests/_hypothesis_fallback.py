@@ -1,0 +1,60 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The property tests degrade gracefully: each ``@given`` test runs a fixed
+number of seeded pseudo-random examples instead of hypothesis' adaptive
+search. Only the tiny strategy surface this suite uses is implemented
+(``integers``, ``floats``, ``sampled_from``). Install ``hypothesis``
+(see requirements-dev.txt) to get real shrinking property tests.
+"""
+from __future__ import annotations
+
+import random
+
+FALLBACK_EXAMPLES = 5
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+
+st = _Strategies()
+
+
+def settings(**_kwargs):
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        def run(*args, **kwargs):
+            rng = random.Random(0)
+            for _ in range(FALLBACK_EXAMPLES):
+                drawn = [s.example(rng) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+        # NOT functools.wraps: pytest must see the zero-arg signature, not
+        # the wrapped function's strategy parameters (no such fixtures).
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        return run
+    return deco

@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # degrade to seeded fixed examples
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.quantize import quantize_activations, quantize_weights
 from repro.core.sparqle import encode, tile_population
