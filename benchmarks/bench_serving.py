@@ -92,6 +92,12 @@ def run(emit, n_requests: int = 8, rate_hz: float = 2.0,
          "inter-token latency")
     emit("serving/act_sparsity_pct", float(spars.mean() * 100),
          "decode-time MSB4 sub-precision sparsity")
+    if "wire_compression_pct" in agg:
+        emit("serving/wire_compression_pct", agg["wire_compression_pct"],
+             "MEASURED packed-wire activation bytes saved vs dense int8")
+        emit("serving/wire_bytes_per_token",
+             float(sum(agg["layer_wire_bytes_per_token"])),
+             "measured bytes/token, inter-layer hidden stream, all layers")
     emit("serving/engine_steps", agg["steps"], "continuous-batching steps")
     emit("serving/pool_evictions", agg["pool_evictions"],
          "preemptions under page pressure")

@@ -16,3 +16,8 @@ from repro.core.clipping import (  # noqa: F401
 from repro.core.sparse_matmul import (  # noqa: F401
     sparqle_matmul_xla, quantized_linear_sparqle,
 )
+from repro.core.packing import (  # noqa: F401
+    PackedSparqleActivation, encode_packed, decode_packed, unpack_planes,
+    planes_packed, pack_nibbles, unpack_nibbles, pack_pbm, unpack_pbm,
+    measured_wire_bytes_rows,
+)

@@ -1,0 +1,261 @@
+"""SPARQLe packed sub-precision wire format (the storage layout, for real).
+
+``core/sparqle.py`` decomposes int8 activations into nibble *planes* carried
+in full int8 containers — convenient for kernels, but the bytes it moves are
+dense-int8 bytes. This module is the actual wire format the paper's Eq. 1
+accounts for, with exact pack/unpack inverses:
+
+  * **LSB4 plane** — two nibbles per byte, row-major.  Byte ``j`` of a row
+    holds column ``2j`` in its low nibble and column ``2j+1`` in its high
+    nibble (the same convention as ``qlinear.pack_int4``).
+  * **PBM words** — the precision bitmap folded into little-endian uint32
+    words: bit ``i`` of word ``w`` is the PBM of column ``32*w + i``.
+  * **MSB stream** — only the nonzero MSB4 nibbles, compacted in column
+    order two-per-byte and indexed by the bitmap (nibble ``r`` of a row's
+    stream belongs to the column of the row's ``r``-th set PBM bit).
+    The device container is worst-case sized (K/2 bytes per row — JAX
+    shapes are static); ``wire_bytes()`` measures the bytes actually
+    occupied, ``ceil(popcount/2)`` per row.
+
+**Padding rule:** the logical K axis is zero-padded up to a multiple of
+``K_ALIGN = 32`` (the lcm of 2 nibbles/byte and 32 PBM bits/word) before
+packing. Padded columns encode as value 0 with PBM 0, so they add LSB/PBM
+container bytes (the "PBM-word rounding slack" vs Eq. 1) but no MSB stream
+bytes, and ``decode_packed`` slices them back off exactly.
+
+Kernels do not walk the bitmap-indexed stream (a 128-lane MXU tile needs
+rectangular operands): ``kernels/sparqle_matmul.sparqle_matmul_packed``
+consumes the two nibble planes packed two-per-byte (``pack_nibbles`` on
+LSB4 and MSB4) and unpacks them in VMEM. ``planes_packed`` produces that
+kernel operand form from a :class:`PackedSparqleActivation`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparqle import SparqleActivation
+
+PBM_WORD_BITS = 32
+K_ALIGN = 32          # lcm(2 nibbles/byte, 32 PBM bits/word)
+
+
+def pad_k(k: int) -> int:
+    """Padded column count of the wire layout for a logical width ``k``."""
+    return k + (-k) % K_ALIGN
+
+
+def _pad_cols(x: jax.Array, mult: int) -> jax.Array:
+    pad = (-x.shape[-1]) % mult
+    if not pad:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+
+
+# ---------------------------------------------------------------------------
+# nibble / bitmap primitives
+# ---------------------------------------------------------------------------
+
+def pack_nibbles(nib: jax.Array) -> jax.Array:
+    """(..., K even) nibble values -> (..., K/2) bytes (int8 container).
+
+    Byte ``j`` = ``nib[2j] & 0xF  |  (nib[2j+1] & 0xF) << 4``. Works for
+    unsigned LSB4 ([0, 15]) and two's-complement MSB4 ([-8, 7]) alike —
+    only the low 4 bits of each value travel.
+    """
+    assert nib.shape[-1] % 2 == 0, nib.shape
+    lo = jnp.bitwise_and(nib[..., 0::2], 0xF)
+    hi = jnp.bitwise_and(nib[..., 1::2], 0xF)
+    return jnp.bitwise_or(lo, jnp.left_shift(hi, 4)).astype(jnp.int8)
+
+
+def unpack_nibbles(packed: jax.Array, *, signed: bool) -> jax.Array:
+    """Inverse of :func:`pack_nibbles`. ``signed`` sign-extends each nibble
+    (MSB4 convention); unsigned yields values in [0, 15] (LSB4)."""
+    b = packed.astype(jnp.int8)
+    if signed:
+        lo = jnp.right_shift(jnp.left_shift(b, 4), 4)
+        hi = jnp.right_shift(b, 4)
+    else:
+        lo = jnp.bitwise_and(b, 0xF)
+        hi = jnp.bitwise_and(jnp.right_shift(b, 4), 0xF)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*b.shape[:-1], b.shape[-1] * 2).astype(jnp.int8)
+
+
+def pack_pbm(pbm: jax.Array) -> jax.Array:
+    """(..., K mult of 32) bool -> (..., K/32) uint32 bitmask words."""
+    assert pbm.shape[-1] % PBM_WORD_BITS == 0, pbm.shape
+    w = pbm.reshape(*pbm.shape[:-1], -1, PBM_WORD_BITS).astype(jnp.uint32)
+    weights = jnp.left_shift(
+        jnp.uint32(1), jnp.arange(PBM_WORD_BITS, dtype=jnp.uint32))
+    return jnp.sum(w * weights, axis=-1).astype(jnp.uint32)
+
+
+def unpack_pbm(words: jax.Array, k: int) -> jax.Array:
+    """Inverse of :func:`pack_pbm`, sliced to ``k`` logical columns."""
+    bits = jnp.bitwise_and(
+        jnp.right_shift(words[..., None],
+                        jnp.arange(PBM_WORD_BITS, dtype=jnp.uint32)),
+        jnp.uint32(1))
+    flat = bits.reshape(*words.shape[:-1], words.shape[-1] * PBM_WORD_BITS)
+    return flat[..., :k].astype(bool)
+
+
+def compact_msb(msb4: jax.Array,
+                pbm: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Compact the nonzero MSB4 nibbles into a bitmap-indexed stream.
+
+    msb4/pbm (M, K) -> (stream (M, K/2) int8 two-nibbles-per-byte,
+    count (M,) int32). The stream container is worst-case sized; nibbles
+    past ``count`` are zero.
+    """
+    m, k = msb4.shape
+    idx = jnp.cumsum(pbm, axis=1) - 1
+    dest = jnp.where(pbm, idx, k)           # out-of-range writes dropped
+    rows = jnp.arange(m)[:, None]
+    nib = jnp.zeros((m, k), jnp.int8)
+    nib = nib.at[rows, dest].set(
+        jnp.bitwise_and(msb4, 0xF).astype(jnp.int8), mode="drop")
+    return pack_nibbles(nib), jnp.sum(pbm, axis=1).astype(jnp.int32)
+
+
+def expand_msb(stream: jax.Array, pbm: jax.Array) -> jax.Array:
+    """Inverse of :func:`compact_msb`: scatter stream nibbles back to the
+    dense (sign-extended) MSB4 plane using the bitmap."""
+    m, k = pbm.shape
+    nib = unpack_nibbles(stream, signed=True)           # (M, K) in [-8, 7]
+    idx = jnp.clip(jnp.cumsum(pbm, axis=1) - 1, 0, k - 1)
+    rows = jnp.arange(m)[:, None]
+    return jnp.where(pbm, nib[rows, idx], 0).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# the packed activation pytree
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedSparqleActivation:
+    """An int8 activation tensor in the SPARQLe packed wire format.
+
+    Arrays cover the K-padded layout (``pad_k(K)`` columns); ``shape`` is
+    the logical (M, K) and is static pytree aux data.
+    """
+
+    lsb4: jax.Array        # (M, Kp/2) int8 — two LSB nibbles per byte
+    pbm: jax.Array         # (M, Kp/32) uint32 bitmask words
+    msb_stream: jax.Array  # (M, Kp/2) int8 — compacted MSB nibbles
+    msb_count: jax.Array   # (M,) int32 — nibbles used in each row's stream
+    scale: jax.Array       # f32 activation scale (as SparqleActivation)
+    shape: Tuple[int, int] = (0, 0)
+
+    def tree_flatten(self):
+        return ((self.lsb4, self.pbm, self.msb_stream, self.msb_count,
+                 self.scale), self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, shape=aux)
+
+    # -- measured accounting ----------------------------------------------
+
+    def wire_bytes(self) -> jax.Array:
+        """MEASURED bytes of this tensor on the wire (not container bytes):
+        LSB plane + PBM words + ``ceil(popcount/2)`` stream bytes per row.
+        Returns a jnp scalar (int-cast by host callers)."""
+        m = self.lsb4.shape[0]
+        lsb_b = m * self.lsb4.shape[-1]
+        pbm_b = m * self.pbm.shape[-1] * 4
+        msb_b = jnp.sum((self.msb_count + 1) // 2)
+        return lsb_b + pbm_b + msb_b
+
+    def container_bytes(self) -> int:
+        """Bytes of the device containers (worst-case MSB stream)."""
+        return int(self.lsb4.size + self.pbm.size * 4 + self.msb_stream.size
+                   + self.msb_count.size * 4)
+
+    def dense_bytes(self) -> int:
+        """Bytes of the dense int8 tensor this encodes."""
+        m, k = self.shape
+        return m * k
+
+
+def encode_packed(x_int8: jax.Array,
+                  scale: jax.Array | float = 1.0) -> PackedSparqleActivation:
+    """int8 (M, K) tensor -> packed wire format. Exact for all int8 input."""
+    x = x_int8.astype(jnp.int8)
+    assert x.ndim == 2, x.shape
+    m, k = x.shape
+    xp = _pad_cols(x, K_ALIGN)
+    msb4 = jnp.right_shift(xp, 4)
+    lsb4 = jnp.bitwise_and(xp, 0xF)
+    pbm = msb4 != 0
+    stream, count = compact_msb(msb4, pbm)
+    return PackedSparqleActivation(
+        lsb4=pack_nibbles(lsb4),
+        pbm=pack_pbm(pbm),
+        msb_stream=stream,
+        msb_count=count,
+        scale=jnp.asarray(scale, jnp.float32),
+        shape=(m, k))
+
+
+def decode_packed(p: PackedSparqleActivation) -> jax.Array:
+    """Packed wire format -> int8 (M, K). Inverse of :func:`encode_packed`."""
+    m, k = p.shape
+    kp = p.lsb4.shape[-1] * 2
+    pbm = unpack_pbm(p.pbm, kp)
+    lsb4 = unpack_nibbles(p.lsb4, signed=False)
+    msb4 = expand_msb(p.msb_stream, pbm)
+    x = msb4.astype(jnp.int32) * 16 + lsb4.astype(jnp.int32)
+    return x.astype(jnp.int8)[:, :k]
+
+
+def planes_packed(p: PackedSparqleActivation) -> Tuple[jax.Array, jax.Array]:
+    """Kernel operand form: (lsb4 packed, msb4 packed) dense nibble planes,
+    both (M, Kp/2) two-per-byte — what ``sparqle_matmul_packed`` unpacks
+    in VMEM. The MSB plane is re-expanded from the stream (rectangular
+    operands; the bitmap-indexed stream is the storage/DMA format)."""
+    kp = p.lsb4.shape[-1] * 2
+    pbm = unpack_pbm(p.pbm, kp)
+    msb4 = expand_msb(p.msb_stream, pbm)
+    return p.lsb4, pack_nibbles(msb4)
+
+
+def unpack_planes(p: PackedSparqleActivation) -> SparqleActivation:
+    """Packed wire format -> the dense-plane :class:`SparqleActivation`
+    (int8 containers), sliced to the logical shape."""
+    m, k = p.shape
+    kp = p.lsb4.shape[-1] * 2
+    pbm = unpack_pbm(p.pbm, kp)
+    return SparqleActivation(
+        lsb4=unpack_nibbles(p.lsb4, signed=False)[:, :k],
+        msb4=expand_msb(p.msb_stream, pbm)[:, :k],
+        pbm=pbm[:, :k],
+        scale=p.scale)
+
+
+# ---------------------------------------------------------------------------
+# lightweight measured accounting (telemetry hot paths)
+# ---------------------------------------------------------------------------
+
+def measured_wire_bytes_rows(q_int8: jax.Array) -> jax.Array:
+    """Measured packed-wire bytes per row of an int8 tensor (..., K),
+    WITHOUT running the codec: ``Kp/2 + 4*Kp/32 + ceil(popcount/2)``.
+    Matches ``encode_packed(row).wire_bytes()`` exactly; cheap enough for
+    per-layer serving telemetry inside jitted steps."""
+    q = q_int8.astype(jnp.int8)
+    k = q.shape[-1]
+    kp = pad_k(k)
+    nnz = jnp.sum((jnp.right_shift(q, 4) != 0).astype(jnp.int32), axis=-1)
+    fixed = kp // 2 + (kp // PBM_WORD_BITS) * 4
+    return fixed + (nnz + 1) // 2
+
+
+def dense_bytes_rows(q_int8: jax.Array) -> int:
+    """Dense int8 bytes per row (the baseline the wire format displaces)."""
+    return q_int8.shape[-1]

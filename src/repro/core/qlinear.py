@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.clipping import apply_clipping, importance_mask_tile_aligned
+from repro.core.packing import encode_packed, unpack_planes
 from repro.core.quantize import (QuantizedTensor, quantize_activations,
                                  quantize_weights)
 from repro.core.sparqle import encode
@@ -64,7 +65,10 @@ class SparqleLinear:
     nibble-PACKED along K ((K/2, N)) when ``packed``. ``col_mask`` marks
     the k% least-important activation columns (per expert for batched
     weights); ``l``/``h`` are the calibrated clipping constants.
-    Aux (untraced): ``mode`` ('sparqle' | 'dense'), ``packed``.
+    Aux (untraced): ``mode`` ('sparqle' | 'dense'), ``packed``, and
+    ``wire_format`` ('unpacked' | 'packed') — the latter routes the
+    *activation* stream through the packed sub-precision wire format
+    (``core/packing.py``) before the dual-pass matmul.
     """
 
     w: QuantizedTensor
@@ -73,15 +77,19 @@ class SparqleLinear:
     h: Optional[jax.Array]
     mode: str = "sparqle"
     packed: bool = False
+    wire_format: str = "unpacked"
 
     def tree_flatten(self):
-        return (self.w, self.col_mask, self.l, self.h), (self.mode,
-                                                         self.packed)
+        return (self.w, self.col_mask, self.l, self.h), (
+            self.mode, self.packed, self.wire_format)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        mode, packed = aux if isinstance(aux, tuple) else (aux, False)
-        return cls(*children, mode=mode, packed=packed)
+        aux = aux if isinstance(aux, tuple) else (aux,)
+        mode = aux[0]
+        packed = aux[1] if len(aux) > 1 else False
+        wf = aux[2] if len(aux) > 2 else "unpacked"
+        return cls(*children, mode=mode, packed=packed, wire_format=wf)
 
     def unpacked_q(self) -> jax.Array:
         q = self.w.q.astype(jnp.int8)
@@ -99,16 +107,30 @@ class SparqleLinear:
         return tuple(s)
 
 
-def _dual_pass_matmul(q: jax.Array, wq: jax.Array, batched: bool) -> jax.Array:
-    """int8 SPARQLe activations x int-weights -> int32, dual nibble passes."""
-    act = encode(q)
+def _dual_pass_matmul(q: jax.Array, wq: jax.Array, batched: bool,
+                      wire_format: str = "unpacked") -> jax.Array:
+    """int8 SPARQLe activations x int-weights -> int32, dual nibble passes.
+
+    ``wire_format='packed'`` round-trips the activations through the packed
+    sub-precision wire format first, making the wire layout — not the dense
+    int8 tensor — the source of truth the matmul consumes. The codec is an
+    exact inverse pair, so both formats produce bit-identical accumulators.
+    """
+    if wire_format == "packed":
+        pa = encode_packed(q.reshape(-1, q.shape[-1]))
+        planes = unpack_planes(pa)
+        lsb = planes.lsb4.reshape(q.shape)
+        msb = planes.msb4.reshape(q.shape)
+    else:
+        act = encode(q)
+        lsb, msb = act.lsb4, act.msb4
     if batched:   # (E, C, K) x (E, K, N)
         dims = (((2,), (1,)), ((0,), (0,)))
     else:         # (M, K) x (K, N)
         dims = (((1,), (0,)), ((), ()))
-    dense = jax.lax.dot_general(act.lsb4, wq, dims,
+    dense = jax.lax.dot_general(lsb, wq, dims,
                                 preferred_element_type=jnp.int32)
-    sparse = jax.lax.dot_general(act.msb4, wq, dims,
+    sparse = jax.lax.dot_general(msb, wq, dims,
                                  preferred_element_type=jnp.int32)
     return dense + sparse * 16
 
@@ -158,7 +180,7 @@ def _quantized_apply(x: jax.Array, sl: SparqleLinear,
         q = apply_clipping(q, mask, sl.l, sl.h)
     wq = sl.unpacked_q()
     if sl.mode == "sparqle":
-        acc = _dual_pass_matmul(q, wq, batched)
+        acc = _dual_pass_matmul(q, wq, batched, sl.wire_format)
     else:
         acc = _single_pass_matmul(q, wq, batched)
     w_scale = sl.w.scale  # (1, N) or (E, 1, N) per-output-channel
@@ -198,12 +220,14 @@ def quantize_leaf(
     tile_k: int = 128,
     enable_clipping: bool = True,
     pack: bool = True,
+    wire_format: str = "unpacked",
 ) -> SparqleLinear:
     """Quantize one (K, N) or (E, K, N) projection into served form.
 
     ``pack`` nibble-packs the int4 payload two-per-byte along K (halving
     the stored/streamed weight bytes); disabled automatically for odd K
-    or w_bits > 4.
+    or w_bits > 4. ``wire_format='packed'`` additionally routes the
+    layer's *activations* through the packed sub-precision wire format.
     """
     if leaf.ndim == 2:
         wq = quantize_weights(leaf, bits=w_bits, axis=0)
@@ -230,6 +254,7 @@ def quantize_leaf(
         h=jnp.float32(clip_h) if enable_clipping else None,
         mode=mode,
         packed=do_pack,
+        wire_format=wire_format,
     )
 
 
@@ -244,11 +269,14 @@ def quantize_model_params(
     enable_clipping: bool = True,
     per_layer_lh: Optional[Dict[str, tuple]] = None,
     tile_k: int = 128,
+    wire_format: str = "unpacked",
 ) -> Dict[str, Any]:
     """Rewrite every projection leaf of a param tree into SPARQLe form.
 
     ``per_layer_lh`` optionally maps path prefixes to (l, h) pairs (the
     Algorithm-1 layerwise constants); unmatched paths use the global pair.
+    ``wire_format='packed'`` serves every projection's activations through
+    the packed sub-precision wire format.
     """
 
     def walk(tree, prefix=""):
@@ -267,7 +295,7 @@ def quantize_model_params(
                 q1 = lambda w: quantize_leaf(  # noqa: E731
                     w, w_bits=w_bits, k_percent=k_percent, clip_l=l,
                     clip_h=h, mode=mode, enable_clipping=enable_clipping,
-                    tile_k=tile_k)
+                    tile_k=tile_k, wire_format=wire_format)
                 # routed-expert weights are (E,K,N)-batched; shared-expert
                 # weights (w_shared_*) are plain 2D despite living in moe/
                 is_expert = (("/moe/" in path or path.startswith("moe/"))

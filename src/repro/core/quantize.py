@@ -5,8 +5,11 @@ per-token (or per-tensor) int8 activation quantization with optional
 zero-point adjustment (paper §3.1: shifting non-centered distributions into
 the MSB4==0 range), and int4 KV-cache quantization (W4A8KV4 / W2A8KV4).
 
-All quantized payloads are carried in int8 containers; true packed widths are
-accounted analytically (DESIGN.md §2, "Int4 packing").
+Quantized payloads are carried in int8 containers at this level; sub-byte
+packing is applied downstream where the bytes move — weights via
+``qlinear.pack_int4``, the KV cache via ``model._kv_quant``, and the
+activation stream via the packed wire format in ``core/packing.py``
+(docs/format.md).
 """
 from __future__ import annotations
 

@@ -4,17 +4,20 @@ Decomposes an int8 activation tensor into the three structured components of
 the SPARQLe representation:
 
   * ``lsb4`` — dense tensor of the low 4 bits of every element (values 0..15,
-    carried in an int8 container; a real TPU deployment packs two per byte),
+    carried in an int8 container),
   * ``pbm``  — precision bitmap, ``True`` where the element's MSB4 is nonzero,
   * ``msb4`` — the arithmetic high nibble (values -8..7, int8 container).
 
 Numerical identity (two's complement):  ``x == (x >> 4) * 16 + (x & 0xF)``.
 
-``msb4`` is kept *dense but mostly-zero* on the JAX side — compression is a
-storage-format concern; the kernel (kernels/sparqle_matmul.py) consumes the
-dense nibble planes plus per-tile population counts, and the analytical cost
-model (core/costmodel.py) accounts for the compressed wire format
-(Eq. 1: compression% = (4s-1)/8 * 100 for p=8).
+This module is the *plane-level* codec: full int8 containers, convenient
+for kernels and tests. The actual wire format — LSB4 two-per-byte, PBM
+folded into uint32 words, MSB4 compacted into a bitmap-indexed stream —
+lives in ``core/packing.py`` (see docs/format.md), with measured
+``wire_bytes()`` accounting and packed Pallas kernel variants
+(``kernels/sparqle_{encode,matmul}.py``). ``encoded_bytes`` below is the
+analytical Eq. 1 *prediction* the measured bytes are benchmarked against
+(compression% = (4s-1)/8 * 100 for p=8).
 """
 from __future__ import annotations
 
@@ -104,7 +107,10 @@ def ops_reduction_percent(s: jax.Array | float) -> jax.Array:
 
 
 def encoded_bytes(shape: Tuple[int, ...], s: float, p: int = 8) -> float:
-    """Wire bytes of the compressed representation for an ``s``-sparse tensor."""
+    """Eq. 1 analytical *prediction* of the compressed wire bytes for an
+    ``s``-sparse tensor. The measured counterpart is
+    ``packing.PackedSparqleActivation.wire_bytes()`` (the two differ by
+    the PBM-word / stream-byte rounding slack)."""
     n = 1
     for d in shape:
         n *= d

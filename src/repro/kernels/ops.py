@@ -18,11 +18,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.packing import pack_nibbles
 from repro.core.quantize import QuantizedTensor, quantize_activations
 from repro.core.sparqle import SparqleActivation, encode, tile_population
 from repro.kernels.quant_matmul import quant_matmul
 from repro.kernels.sparqle_matmul import (
-    DEFAULT_BK, DEFAULT_BM, DEFAULT_BN, sparqle_matmul)
+    DEFAULT_BK, DEFAULT_BM, DEFAULT_BN, sparqle_matmul,
+    sparqle_matmul_packed)
 
 
 def _pad_to(x: jax.Array, mult: tuple) -> jax.Array:
@@ -40,12 +42,18 @@ def sparqle_linear(
     clip_l: Optional[jax.Array] = None,
     clip_h: Optional[jax.Array] = None,
     backend: str = "pallas",
+    wire_format: str = "unpacked",
     bm: int = DEFAULT_BM,
     bn: int = DEFAULT_BN,
     bk: int = DEFAULT_BK,
     interpret: bool = True,
 ) -> jax.Array:
-    """Quantize -> (clip) -> decompose -> dual-pass matmul. x: (..., K)."""
+    """Quantize -> (clip) -> decompose -> dual-pass matmul. x: (..., K).
+
+    ``wire_format='packed'`` streams the activation nibble planes in the
+    two-per-byte wire layout (``sparqle_matmul_packed`` unpacks in-VMEM);
+    bit-exact vs ``'unpacked'`` — same kernel body, half the DMA bytes.
+    """
     from repro.core.clipping import apply_clipping
 
     orig = x.shape
@@ -59,8 +67,14 @@ def sparqle_linear(
     if col_mask is not None and clip_l is not None:
         q = apply_clipping(q, col_mask, clip_l, clip_h)
 
+    assert wire_format in ("unpacked", "packed"), wire_format
     if backend == "xla":
-        act = encode(q, 1.0)
+        if wire_format == "packed":
+            # the wire layout, not the dense int8 tensor, feeds the matmul
+            from repro.core.packing import encode_packed, unpack_planes
+            act = unpack_planes(encode_packed(q))
+        else:
+            act = encode(q, 1.0)
         from repro.core.sparse_matmul import sparqle_matmul_xla
         out = sparqle_matmul_xla(
             SparqleActivation(act.lsb4, act.msb4, act.pbm, jnp.float32(1.0)),
@@ -77,8 +91,13 @@ def sparqle_linear(
     asc = _pad_to(qa.scale.reshape(-1, 1).astype(jnp.float32), (bm, 1))
     wsc = _pad_to(w.scale.reshape(1, -1).astype(jnp.float32), (1, bn))
     pop = tile_population(pbm, bm, bk)
-    out = sparqle_matmul(lsb, msb, pop, wq, asc, wsc,
-                         bm=bm, bn=bn, bk=bk, interpret=interpret)
+    if wire_format == "packed":
+        out = sparqle_matmul_packed(
+            pack_nibbles(lsb), pack_nibbles(msb), pop, wq, asc, wsc,
+            bm=bm, bn=bn, bk=bk, interpret=interpret)
+    else:
+        out = sparqle_matmul(lsb, msb, pop, wq, asc, wsc,
+                             bm=bm, bn=bn, bk=bk, interpret=interpret)
     out = out[:m, :n_out]
     return out.reshape(*orig[:-1], n_out).astype(x.dtype)
 

@@ -16,11 +16,20 @@ TPU adaptation of the paper's hybrid PE array (§3.3, DESIGN.md §2):
   * per-token activation scales and per-channel weight scales applied at
     drain time (the paper's drain-path SFU requantization).
 
-4-bit payloads (LSB4/MSB4 in [0,15]/[-8,7], int4 weights) travel in int8
-containers: ``jnp.int4`` is not fully supported by the CPU/interpret path
-used for validation. On real TPU the MXU consumes int8 natively; true int4
-packing halves DMA bytes and is accounted analytically in the roofline and
-the cost model.
+Two operand layouts share one kernel body (``_tile_body``), so they are
+bit-exact by construction:
+
+  * :func:`sparqle_matmul` — dense nibble planes in int8 containers
+    (one byte per nibble; the debug/legacy layout);
+  * :func:`sparqle_matmul_packed` — nibble planes packed two-per-byte
+    (``core.packing.pack_nibbles``), unpacked in-VMEM right after the DMA.
+    This is the wire-format hot path: the activation blocks the grid
+    streams from HBM are half the bytes of the unpacked variant.
+
+Int4 *weights* travel in int8 containers here: ``jnp.int4`` is not fully
+supported by the CPU/interpret path used for validation. On real TPU the
+MXU consumes int8 natively; weight packing is handled upstream
+(``qlinear.pack_int4``) and unpacked before the kernel call.
 
 Grid: (M/bm, N/bn, K/bk), K innermost (``arbitrary``), output-stationary
 accumulator scratch in VMEM. ``tile_pop`` — the per-(M-tile, K-tile) PBM
@@ -37,12 +46,46 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.packing import unpack_nibbles
 from repro.kernels import CompilerParams as _CompilerParams
 
 
 DEFAULT_BM = 128
 DEFAULT_BN = 128
 DEFAULT_BK = 128
+
+
+def _tile_body(pop, lsb, msb_fn, w, acc_ref):
+    """Shared dual-pass accumulation for one (bm, bk, bn) tile.
+
+    ``lsb`` is the UNPACKED (bm, bk) int8 LSB4 plane; ``msb_fn`` is a
+    thunk producing the unpacked MSB4 plane — a thunk so the guarded
+    branch below is what reads (and, for the packed layout, unpacks) the
+    sparse plane: pop == 0 tiles skip that work entirely. Both entry
+    kernels normalize their operand layout this way, which is what keeps
+    the packed and unpacked paths bit-exact.
+    """
+    # ---- dense pass: LSB4 (always executes) ----
+    acc_ref[...] += jax.lax.dot_general(
+        lsb, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    # ---- sparse pass: MSB4, skipped when this (m,k) tile has no PBM bits
+    @pl.when(pop > 0)
+    def _sparse():
+        acc_ref[...] += (
+            jax.lax.dot_general(
+                msb_fn(), w, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            << 4)
+
+
+def _drain(k, n_k, acc_ref, out_ref, ascale_ref, wscale_ref):
+    @pl.when(k == n_k - 1)
+    def _():
+        out_ref[...] = (
+            acc_ref[...].astype(jnp.float32)
+            * ascale_ref[...].astype(jnp.float32)
+            * wscale_ref[...].astype(jnp.float32))
 
 
 def _kernel(pop_ref, lsb_ref, msb_ref, w_ref, ascale_ref, wscale_ref,
@@ -53,32 +96,50 @@ def _kernel(pop_ref, lsb_ref, msb_ref, w_ref, ascale_ref, wscale_ref,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    w = w_ref[...].astype(jnp.int8)
+    _tile_body(pop_ref[0, 0], lsb_ref[...].astype(jnp.int8),
+               lambda: msb_ref[...].astype(jnp.int8),
+               w_ref[...].astype(jnp.int8), acc_ref)
+    _drain(k, n_k, acc_ref, out_ref, ascale_ref, wscale_ref)
 
-    # ---- dense pass: LSB4 (always executes) ----
-    lsb = lsb_ref[...].astype(jnp.int8)
-    acc_ref[...] += jax.lax.dot_general(
-        lsb, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
 
-    # ---- sparse pass: MSB4, skipped when this (m,k) tile has no PBM bits ----
-    pop = pop_ref[0, 0]
+def _kernel_packed(pop_ref, lsbp_ref, msbp_ref, w_ref, ascale_ref,
+                   wscale_ref, out_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
 
-    @pl.when(pop > 0)
-    def _sparse():
-        msb = msb_ref[...].astype(jnp.int8)
-        acc_ref[...] += (
-            jax.lax.dot_general(
-                msb, w, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32)
-            << 4)
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # ---- drain: requantize with act/weight scales ----
-    @pl.when(k == n_k - 1)
-    def _drain():
-        out_ref[...] = (
-            acc_ref[...].astype(jnp.float32)
-            * ascale_ref[...].astype(jnp.float32)
-            * wscale_ref[...].astype(jnp.float32))
+    # in-VMEM unpack of the half-width packed blocks (the DMA moved bk/2
+    # bytes per row; the MXU still sees full (bm, bk) nibble planes) —
+    # the codec's own unpack primitive, so kernel and wire layout cannot
+    # drift apart; the MSB unpack happens inside the pop > 0 guard
+    lsb = unpack_nibbles(lsbp_ref[...], signed=False)
+    _tile_body(pop_ref[0, 0], lsb,
+               lambda: unpack_nibbles(msbp_ref[...], signed=True),
+               w_ref[...].astype(jnp.int8), acc_ref)
+    _drain(k, n_k, acc_ref, out_ref, ascale_ref, wscale_ref)
+
+
+def _call(kernel, grid, act_specs, act_args, w, act_scale, w_scale,
+          tile_pop, m, n, bm, bn, bk, n_k, interpret):
+    return pl.pallas_call(
+        functools.partial(kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, kk: (i, kk)),        # tile_pop
+            *act_specs,                                            # lsb, msb
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),      # w
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),        # act_scale
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),        # w_scale
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(tile_pop, *act_args, w, act_scale, w_scale)
 
 
 @functools.partial(
@@ -105,22 +166,52 @@ def sparqle_matmul(
 
     n_k = k // bk
     grid = (m // bm, n // bn, n_k)
+    act_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),      # lsb4
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),      # msb4
+    ]
+    return _call(_kernel, grid, act_specs, (lsb4, msb4), w, act_scale,
+                 w_scale, tile_pop, m, n, bm, bn, bk, n_k, interpret)
 
-    return pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j, kk: (i, kk)),        # tile_pop
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),      # lsb4
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),      # msb4
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),      # w
-            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),        # act_scale
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),        # w_scale
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        interpret=interpret,
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-    )(tile_pop, lsb4, msb4, w, act_scale, w_scale)
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def sparqle_matmul_packed(
+    lsb4_packed: jax.Array,  # (M, K/2) int8 — two LSB nibbles per byte
+    msb4_packed: jax.Array,  # (M, K/2) int8 — two MSB nibbles per byte
+    tile_pop: jax.Array,     # (M/bm, K/bk) int32 PBM population per tile
+    w: jax.Array,            # (K, N) int8 (int4 payload)
+    act_scale: jax.Array,    # (M, 1) f32
+    w_scale: jax.Array,      # (1, N) f32
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Wire-format variant of :func:`sparqle_matmul`.
+
+    Activation planes arrive packed two-per-byte (half the DMA bytes) and
+    are unpacked in VMEM; the accumulation body is shared, so outputs are
+    bit-exact vs the unpacked kernel on identical logical operands.
+    """
+    m, kh = lsb4_packed.shape
+    k = kh * 2
+    k2, n = w.shape
+    assert k == k2, (lsb4_packed.shape, w.shape)
+    assert msb4_packed.shape == (m, kh), msb4_packed.shape
+    assert bk % 2 == 0, bk
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"operands must be tile-aligned: {(m, k, n)} vs {(bm, bk, bn)}")
+    assert tile_pop.shape == (m // bm, k // bk), tile_pop.shape
+
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    hbk = bk // 2
+    act_specs = [
+        pl.BlockSpec((bm, hbk), lambda i, j, kk: (i, kk)),     # lsb4 packed
+        pl.BlockSpec((bm, hbk), lambda i, j, kk: (i, kk)),     # msb4 packed
+    ]
+    return _call(_kernel_packed, grid, act_specs,
+                 (lsb4_packed, msb4_packed), w, act_scale, w_scale,
+                 tile_pop, m, n, bm, bn, bk, n_k, interpret)

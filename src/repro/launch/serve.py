@@ -98,6 +98,10 @@ def _engine_serve(cfg, qparams, prompts, args) -> None:
         print(f"  TPOT  mean {np.mean(tpot)*1e3:.1f} ms/token")
     print(f"  decode-time MSB4 sparsity mean {np.mean(spars)*100:.1f}%")
     agg = eng.aggregate_stats()
+    if "wire_compression_pct" in agg:
+        print(f"  measured wire format: {agg['wire_compression_pct']:.1f}% "
+              f"activation bytes saved vs dense int8 "
+              f"({agg['wire_bytes_total']/1e3:.1f} kB on the wire)")
     print(f"  pool: {agg['pool_utilization']*100:.0f}% pages in use at "
           f"drain, {agg['pool_evictions']} evictions")
 

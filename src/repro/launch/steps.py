@@ -237,8 +237,11 @@ def make_engine_prefill_chunk(cfg: ModelConfig):
     """Chunked prefill of ONE sequence into the paged pool.
 
     (params, pool, tokens (1, C), start, valid, block_table (1, Pmax))
-    -> (logits (1, V) at the last valid position, new pool, sparsity).
-    Shape-static in C and Pmax, so the engine compiles this once.
+    -> (logits (1, V) at the last valid position, new pool, telemetry) —
+    telemetry carries the chunk's mean MSB4 sparsity plus per-layer
+    measured packed-wire vs dense activation bytes (see
+    ``models.model.prefill_chunk_paged``). Shape-static in C and Pmax,
+    so the engine compiles this once.
     """
     def prefill_chunk(params, pool, tokens, start, valid, block_table):
         return M.prefill_chunk_paged(cfg, params, pool, tokens, start,
@@ -251,7 +254,9 @@ def make_engine_decode(cfg: ModelConfig):
     """One continuous-batching decode step over every decode slot.
 
     (params, pool, token (B,), pos (B,), block_tables (B, Pmax))
-    -> (logits (B, V), new pool, per-slot hidden MSB4 sparsity (B,)).
+    -> (logits (B, V), new pool, telemetry) — telemetry carries per-slot
+    hidden MSB4 sparsity (B,) plus per-layer (L, B) measured packed-wire
+    vs dense activation bytes (see ``models.model.decode_step_paged``).
     Raw logits come back (not argmax'd): sampling policy is per-request
     and lives host-side in the engine.
     """

@@ -201,6 +201,43 @@ def gelu_mlp(x, w_fc, b_fc, w_proj, b_proj):
 
 
 # ---------------------------------------------------------------------------
+# activation wire telemetry (SPARQLe serving path)
+# ---------------------------------------------------------------------------
+
+def act_wire_telemetry(x: jax.Array) -> dict:
+    """Per-token wire accounting of a hidden-activation tensor (..., D).
+
+    Int8-quantizes ``x`` per token and reports, per row:
+
+      * ``sparsity``    — MSB4 sub-precision sparsity,
+      * ``wire_bytes``  — MEASURED bytes in the packed wire format
+        (``core/packing.py``: LSB4 pairs + PBM words + compacted MSB
+        stream, including the padding/word-rounding slack),
+      * ``dense_bytes`` — the dense int8 baseline (D bytes).
+
+    The paged serving steps call this on the INTER-LAYER hidden (residual)
+    stream — the tensor the paper's drain path writes back to SRAM in
+    SPARQLe format between layers. It is a stream-level measurement, not
+    the per-projection operand accounting: each projection additionally
+    norms (and, with clipping enabled, §3.2-clips) its input before
+    encoding, which shifts per-projection sparsity relative to the
+    numbers reported here (bench_compression.py measures those per-site).
+    """
+    from repro.core.packing import (dense_bytes_rows,
+                                    measured_wire_bytes_rows)
+    from repro.core.quantize import quantize_activations
+    from repro.core.sparqle import subprecision_sparsity
+
+    q = quantize_activations(x, bits=8, per_token=True).q
+    return {
+        "sparsity": subprecision_sparsity(q, axis=-1),
+        "wire_bytes": measured_wire_bytes_rows(q).astype(jnp.float32),
+        "dense_bytes": jnp.full(q.shape[:-1], dense_bytes_rows(q),
+                                jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
 # embedding / head
 # ---------------------------------------------------------------------------
 

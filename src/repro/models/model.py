@@ -34,8 +34,9 @@ from repro.core.quantize import quantize_weights
 from repro.distributed.sharding import constrain
 from repro.models import moe as moe_lib
 from repro.models import ssd as ssd_lib
-from repro.models.layers import (AttnSpec, NEG_INF, decode_attention, embed,
-                                 flash_attention, layer_norm, rms_norm, rope)
+from repro.models.layers import (AttnSpec, NEG_INF, act_wire_telemetry,
+                                 decode_attention, embed, flash_attention,
+                                 layer_norm, rms_norm, rope)
 from repro.models.stages import LayerDef, Stage, build_stages
 
 Params = Dict[str, Any]
@@ -682,13 +683,22 @@ def _apply_layer_decode_paged(cfg, ld: LayerDef, p: Params, x, pool,
 def decode_step_paged(cfg: ModelConfig, params: Params, pool: Cache,
                       token: jax.Array, pos: jax.Array,
                       block_tables: jax.Array
-                      ) -> Tuple[jax.Array, Cache, jax.Array]:
+                      ) -> Tuple[jax.Array, Cache, Dict[str, jax.Array]]:
     """One continuous-batching decode step over the paged pool.
 
     token/pos (B,) int32, block_tables (B, Pmax) int32. Inactive slots
     should carry an all-zero block-table row: their KV writes land in the
     reserved null page 0 and their outputs are discarded by the engine.
-    Returns (logits (B, V), new pool, per-slot hidden MSB4 sparsity (B,)).
+    Returns (logits (B, V), new pool, telemetry dict):
+
+      * ``sparsity``          (B,)   — final-hidden MSB4 sparsity,
+      * ``layer_sparsity``    (L, B) — MSB4 sparsity of the hidden
+        (residual) stream entering each layer,
+      * ``layer_wire_bytes``  (L, B) — MEASURED packed-wire bytes of that
+        inter-layer stream (``core/packing.py`` layout; see
+        ``layers.act_wire_telemetry`` for what this does and does not
+        include),
+      * ``layer_dense_bytes`` (L, B) — dense int8 baseline bytes.
     """
     dt = cfg.cdtype
     x = embed(token, params["embed"]["table"]).astype(dt)
@@ -696,23 +706,33 @@ def decode_step_paged(cfg: ModelConfig, params: Params, pool: Cache,
         x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
     x = constrain(x, ("batch", "embed"))
     new_pool: Cache = {"stages": {}}
+    layer_tels = []
     for si, stage in enumerate(build_stages(cfg)):
         def body(h, inp, stage=stage):
             pslice, cslice = inp
+            tels = []
             new_c = {}
             for pi, ld in enumerate(stage.period):
+                tels.append(act_wire_telemetry(h))   # one per SUB-layer
                 h, c = _apply_layer_decode_paged(
                     cfg, ld, pslice[f"p{pi}"], h, cslice[f"p{pi}"],
                     block_tables, pos)
                 new_c[f"p{pi}"] = c
-            return h, new_c
+            tel = {k: jnp.stack([t[k] for t in tels], 0) for k in tels[0]}
+            return h, (new_c, tel)
 
-        x, nc = jax.lax.scan(body, x, (params["stages"][f"s{si}"],
-                                       pool["stages"][f"s{si}"]))
+        x, (nc, tel) = jax.lax.scan(body, x, (params["stages"][f"s{si}"],
+                                              pool["stages"][f"s{si}"]))
         new_pool["stages"][f"s{si}"] = nc
-    sparsity = _act_subprecision_sparsity(x)
+        # scan stacks to (repeat, period, B): flatten to per-layer (L_s, B)
+        layer_tels.append({k: v.reshape(-1, *v.shape[2:])
+                           for k, v in tel.items()})
+    telemetry = {"sparsity": _act_subprecision_sparsity(x)}
+    for key in ("sparsity", "wire_bytes", "dense_bytes"):
+        telemetry[f"layer_{key}"] = jnp.concatenate(
+            [t[key] for t in layer_tels], axis=0)
     logits = head_logits(cfg, params, x[:, None, :])[:, 0]
-    return logits, new_pool, sparsity
+    return logits, new_pool, telemetry
 
 
 def _attn_prefill_chunk_paged(cfg: ModelConfig, ld: LayerDef, p: Params,
@@ -776,13 +796,18 @@ def _attn_prefill_chunk_paged(cfg: ModelConfig, ld: LayerDef, p: Params,
 def prefill_chunk_paged(cfg: ModelConfig, params: Params, pool: Cache,
                         tokens: jax.Array, start: jax.Array,
                         valid: jax.Array, block_table: jax.Array
-                        ) -> Tuple[jax.Array, Cache, jax.Array]:
+                        ) -> Tuple[jax.Array, Cache, Dict[str, jax.Array]]:
     """Prefill one chunk of ONE sequence into the paged pool.
 
     tokens (1, C) int32 (tail-padded; ``valid`` counts real tokens),
     start — absolute position of tokens[0, 0], block_table (1, Pmax).
-    Returns (logits (1, V) of the last valid position, new pool, mean MSB4
-    sparsity of the chunk's hidden activations).
+    Returns (logits (1, V) of the last valid position, new pool, telemetry
+    dict): ``sparsity`` — mean MSB4 sparsity of the chunk's final hidden
+    activations over valid tokens; ``layer_sparsity`` (L,) mean over the
+    hidden stream entering each layer; ``layer_wire_bytes`` /
+    ``layer_dense_bytes`` (L,) — measured packed-wire vs dense int8 bytes
+    of the chunk's valid tokens on that inter-layer stream
+    (``layers.act_wire_telemetry``).
     """
     dt = cfg.cdtype
     x = embed(tokens, params["embed"]["table"]).astype(dt)
@@ -790,11 +815,14 @@ def prefill_chunk_paged(cfg: ModelConfig, params: Params, pool: Cache,
         x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
     x = constrain(x, ("batch", "seq", "embed"))
     new_pool: Cache = {"stages": {}}
+    layer_tels = []
     for si, stage in enumerate(build_stages(cfg)):
         def body(h, inp, stage=stage):
             pslice, cslice = inp
+            tels = []
             new_c = {}
             for pi, ld in enumerate(stage.period):
+                tels.append(act_wire_telemetry(h))   # one per SUB-layer
                 y, c = _attn_prefill_chunk_paged(
                     cfg, ld, pslice[f"p{pi}"], h, cslice[f"p{pi}"],
                     block_table, start, valid)
@@ -804,19 +832,31 @@ def prefill_chunk_paged(cfg: ModelConfig, params: Params, pool: Cache,
                 elif ld.ffn == "moe":
                     h = h + moe_ffn(cfg, pslice[f"p{pi}"], h)[0]
                 new_c[f"p{pi}"] = c
-            return h, new_c
+            tel = {k: jnp.stack([t[k] for t in tels], 0) for k in tels[0]}
+            return h, (new_c, tel)
 
-        x, nc = jax.lax.scan(body, x, (params["stages"][f"s{si}"],
-                                       pool["stages"][f"s{si}"]))
+        x, (nc, tel) = jax.lax.scan(body, x, (params["stages"][f"s{si}"],
+                                              pool["stages"][f"s{si}"]))
         new_pool["stages"][f"s{si}"] = nc
+        # scan stacks to (repeat, period, 1, C): flatten to (L_s, 1, C)
+        layer_tels.append({k: v.reshape(-1, *v.shape[2:])
+                           for k, v in tel.items()})
     last = jnp.maximum(valid - 1, 0)
     valid_tok = (jnp.arange(tokens.shape[1]) < valid).astype(jnp.float32)
+    n_valid = jnp.maximum(jnp.sum(valid_tok), 1.0)
     sp_tok = _act_subprecision_sparsity(x[0])
-    sparsity = jnp.sum(sp_tok * valid_tok) / jnp.maximum(
-        jnp.sum(valid_tok), 1.0)
+    # per-layer stats over the chunk's VALID tokens only
+    cat = lambda key: jnp.concatenate(  # noqa: E731
+        [t[key][:, 0, :] for t in layer_tels], axis=0)
+    telemetry = {
+        "sparsity": jnp.sum(sp_tok * valid_tok) / n_valid,
+        "layer_sparsity": jnp.sum(cat("sparsity") * valid_tok, -1) / n_valid,
+        "layer_wire_bytes": jnp.sum(cat("wire_bytes") * valid_tok, -1),
+        "layer_dense_bytes": jnp.sum(cat("dense_bytes") * valid_tok, -1),
+    }
     x_last = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
     logits = head_logits(cfg, params, x_last)[:, 0]
-    return logits, new_pool, sparsity
+    return logits, new_pool, telemetry
 
 
 # ---------------------------------------------------------------------------

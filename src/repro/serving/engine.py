@@ -59,6 +59,12 @@ class Engine:
                                   donate_argnums=(1,))
         self._rngs: Dict[int, np.random.Generator] = {}
         self.steps = 0
+        # per-layer measured wire-format telemetry (lazily sized (L,) on
+        # the first step's telemetry): MEASURED packed activation bytes vs
+        # the dense int8 baseline, summed over every processed token
+        self.layer_wire_bytes: Optional[np.ndarray] = None
+        self.layer_dense_bytes: Optional[np.ndarray] = None
+        self.wire_tokens = 0
 
     # -- public API --------------------------------------------------------
 
@@ -101,13 +107,44 @@ class Engine:
         return events
 
     def aggregate_stats(self) -> Dict[str, float]:
-        """Pool-level counters to pair with per-request ``req.stats()``."""
-        return {
+        """Pool-level counters to pair with per-request ``req.stats()``.
+
+        ``wire_*`` keys report the MEASURED packed-wire-format accounting
+        of the inter-layer hidden activation stream (core/packing.py
+        layout; ``models.layers.act_wire_telemetry``), per layer and in
+        aggregate — the engine's view of what Eq. 1 predicts
+        analytically. Stream-level, not per-projection: norm/clipping
+        inside each layer shifts per-projection operand sparsity
+        (bench_compression.py measures those sites).
+        """
+        out = {
             "steps": self.steps,
             "pool_pages_free": self.pool.num_free,
             "pool_utilization": self.pool.utilization(),
             "pool_evictions": self.pool.evictions,
         }
+        if self.layer_wire_bytes is not None and self.wire_tokens:
+            wire = float(self.layer_wire_bytes.sum())
+            dense = float(self.layer_dense_bytes.sum())
+            out["wire_bytes_total"] = wire
+            out["wire_compression_pct"] = (1.0 - wire / dense) * 100.0
+            out["layer_wire_bytes_per_token"] = (
+                self.layer_wire_bytes / self.wire_tokens).tolist()
+            out["layer_dense_bytes_per_token"] = (
+                self.layer_dense_bytes / self.wire_tokens).tolist()
+        return out
+
+    def _account_wire(self, req: Request, wire: float, dense: float,
+                      layer_wire: np.ndarray, layer_dense: np.ndarray,
+                      n_tokens: int) -> None:
+        req.wire_bytes_sum += wire
+        req.dense_bytes_sum += dense
+        if self.layer_wire_bytes is None:
+            self.layer_wire_bytes = np.zeros(layer_wire.shape[0], np.float64)
+            self.layer_dense_bytes = np.zeros(layer_wire.shape[0], np.float64)
+        self.layer_wire_bytes += layer_wire
+        self.layer_dense_bytes += layer_dense
+        self.wire_tokens += n_tokens
 
     # -- internals ---------------------------------------------------------
 
@@ -146,12 +183,17 @@ class Engine:
                            n: int) -> List[Tuple[int, int]]:
         toks = np.zeros((1, self._chunk), np.int32)
         toks[0, :n] = req.context[start:start + n]
-        logits, self.pool.state, sparsity = self._prefill_fn(
+        logits, self.pool.state, tel = self._prefill_fn(
             self.params, self.pool.state, jnp.asarray(toks),
             jnp.asarray(start, jnp.int32), jnp.asarray(n, jnp.int32),
             jnp.asarray(self._block_table_row(req))[None])
-        req.sparsity_sum += float(sparsity) * n
+        req.sparsity_sum += float(tel["sparsity"]) * n
         req.sparsity_n += n
+        layer_wire = np.asarray(tel["layer_wire_bytes"], np.float64)
+        layer_dense = np.asarray(tel["layer_dense_bytes"], np.float64)
+        self._account_wire(req, float(layer_wire.sum()),
+                           float(layer_dense.sum()), layer_wire,
+                           layer_dense, n)
         if not self.sched.prefill_advanced(req, n):
             return []
         self.sched.to_running(req)
@@ -167,15 +209,21 @@ class Engine:
             token[req.slot] = req.context[-1]
             pos[req.slot] = len(req.context) - 1
             tables[req.slot] = self._block_table_row(req)
-        logits, self.pool.state, sparsity = self._decode_fn(
+        logits, self.pool.state, tel = self._decode_fn(
             self.params, self.pool.state, jnp.asarray(token),
             jnp.asarray(pos), jnp.asarray(tables))
         logits = np.asarray(logits)
-        sparsity = np.asarray(sparsity)
+        sparsity = np.asarray(tel["sparsity"])
+        layer_wire = np.asarray(tel["layer_wire_bytes"], np.float64)
+        layer_dense = np.asarray(tel["layer_dense_bytes"], np.float64)
         events = []
         for req in decode:
             req.sparsity_sum += float(sparsity[req.slot])
             req.sparsity_n += 1
+            self._account_wire(
+                req, float(layer_wire[:, req.slot].sum()),
+                float(layer_dense[:, req.slot].sum()),
+                layer_wire[:, req.slot], layer_dense[:, req.slot], 1)
             ev = self._emit(req, self._sample(req, logits[req.slot]))
             if ev:
                 events.append(ev)

@@ -33,6 +33,15 @@ from repro.models.stages import build_stages
 
 NULL_PAGE = 0
 
+# Sub-precision range of a cached int4 nibble, mirroring the LP_LOW/LP_HIGH
+# convention of core/sparqle.py: the values representable by the low-order
+# 2-bit plane alone. Cache nibbles are SIGNED two's-complement int4
+# (quantize_weights is symmetric), so the 2-bit plane is signed too —
+# int2 covers [-2, 1]. (The int8 activation range [LP_LOW, LP_HIGH] is
+# non-negative only because the LSB4 plane there is unsigned.)
+KV2_LOW = -2
+KV2_HIGH = 1
+
 
 @dataclasses.dataclass(frozen=True)
 class PoolConfig:
@@ -128,6 +137,11 @@ class PagedKVPool:
         """Pop ``n`` pages for ``owner``; None (no partial grab) if short."""
         if n < 0:
             raise ValueError(n)
+        if n == 0:
+            # no phantom ownership entries: a zero-page grab must not make
+            # the owner show up in the ownership map (release/evict treat
+            # map presence as "holds pages")
+            return []
         if n > len(self._free):
             return None
         pages = [self._free.popleft() for _ in range(n)]
@@ -141,9 +155,16 @@ class PagedKVPool:
         return pages
 
     def evict(self, owner) -> List[int]:
-        """Preemption hook: reclaim a live owner's pages (and tell them)."""
+        """Preemption hook: reclaim a live owner's pages (and tell them).
+
+        Evicting an owner that holds no pages is a no-op: it neither fires
+        the hook nor counts as an eviction (scheduler churn may retry a
+        preemption after the victim already released).
+        """
         pages = self.pages_of(owner)
-        if pages and self.on_evict is not None:
+        if not pages:
+            return []
+        if self.on_evict is not None:
             self.on_evict(owner, pages)
         self.evictions += 1
         return self.release(owner)
@@ -153,11 +174,14 @@ class PagedKVPool:
     def page_msb_sparsity(self, pages: List[int]) -> np.ndarray:
         """Per-page sub-precision sparsity of the stored int4 nibbles.
 
-        The 4-bit analogue of the paper's MSB4 criterion (int8 value with
-        zero high nibble): fraction of cached K/V nibbles whose high two
-        bits are zero, i.e. values already representable in 2 bits — the
-        headroom a sub-precision cache stream would exploit. Averaged
-        over K and V across every layer.
+        The 4-bit analogue of the paper's MSB4 criterion: fraction of
+        cached K/V nibbles already representable by the low-order 2-bit
+        plane alone, i.e. values in [KV2_LOW, KV2_HIGH] = [-2, 1] (the
+        nibbles are signed two's-complement, so the range is the signed
+        int2 range — ``nib >> 2 == 0`` would arithmetically sign-extend
+        and wrongly exclude -2 and -1). This is the headroom a
+        sub-precision cache stream would exploit, averaged over K and V
+        across every layer.
         """
         if not pages:
             return np.zeros((0,), np.float32)
@@ -172,7 +196,7 @@ class PagedKVPool:
             lo = jnp.right_shift(jnp.left_shift(sel, 4), 4)
             hi = jnp.right_shift(sel, 4)
             nib = jnp.stack([lo, hi], -1)
-            sub = (jnp.right_shift(nib, 2) == 0)
+            sub = (nib >= KV2_LOW) & (nib <= KV2_HIGH)
             per_page = jnp.mean(sub.astype(jnp.float32),
                                 axis=(0, 2, 3, 4, 5))  # -> (n,)
             tot = per_page if tot is None else tot + per_page

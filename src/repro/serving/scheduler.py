@@ -60,6 +60,8 @@ class Request:
     t_last: Optional[float] = None
     sparsity_sum: float = 0.0
     sparsity_n: int = 0
+    wire_bytes_sum: float = 0.0      # measured packed-wire activation bytes
+    dense_bytes_sum: float = 0.0     # dense int8 baseline for the same acts
     preemptions: int = 0
 
     def __post_init__(self):
@@ -87,6 +89,15 @@ class Request:
             "n_generated": self.n_generated,
             "act_sparsity": (self.sparsity_sum / self.sparsity_n
                              if self.sparsity_n else float("nan")),
+            # measured wire-format accounting of this request's
+            # inter-layer hidden activation stream (summed over layers
+            # and processed tokens; see layers.act_wire_telemetry)
+            "act_wire_bytes_per_token": (
+                self.wire_bytes_sum / self.sparsity_n
+                if self.sparsity_n else float("nan")),
+            "act_wire_compression_pct": (
+                (1.0 - self.wire_bytes_sum / self.dense_bytes_sum) * 100.0
+                if self.dense_bytes_sum else float("nan")),
             "preemptions": self.preemptions,
         }
 

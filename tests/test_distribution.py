@@ -26,6 +26,7 @@ def _run_subprocess(code: str, devices: int = 8) -> str:
     return out.stdout
 
 
+@pytest.mark.slow
 def test_moe_manual_ep_matches_reference_multidevice():
     out = _run_subprocess(textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np
@@ -56,6 +57,7 @@ def test_moe_manual_ep_matches_reference_multidevice():
     assert "EP_OK" in out
 
 
+@pytest.mark.slow
 def test_dryrun_lower_cell_smoke_multidevice():
     """One real lower+compile of a small cell on 64 fake devices, both
     profiles — the dry-run machinery itself under test."""

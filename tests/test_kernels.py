@@ -12,14 +12,15 @@ try:
 except ModuleNotFoundError:      # degrade to seeded fixed examples
     from _hypothesis_fallback import given, settings, st
 
+from repro.core import packing as packing_lib
 from repro.core.quantize import quantize_activations, quantize_weights
 from repro.core.sparqle import encode, tile_population
 from repro.kernels.ops import dense_quant_linear, sparqle_linear
 from repro.kernels.quant_matmul import quant_matmul
 from repro.kernels.ref import (quant_matmul_ref, sparqle_encode_ref,
                                sparqle_matmul_ref)
-from repro.kernels.sparqle_encode import sparqle_encode
-from repro.kernels.sparqle_matmul import sparqle_matmul
+from repro.kernels.sparqle_encode import sparqle_encode, sparqle_encode_packed
+from repro.kernels.sparqle_matmul import sparqle_matmul, sparqle_matmul_packed
 
 
 def _mk_inputs(key, m, k, n, sparsity=0.5):
@@ -84,6 +85,91 @@ def test_sparse_pass_skipping_correct():
     out = sparqle_matmul(a.lsb4, a.msb4, pop, w, asc, wsc)
     ref = quant_matmul_ref(x, w, asc, wsc)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,k,n,s", [(128, 256, 128, 0.5),
+                                     (256, 128, 128, 0.0),
+                                     (128, 128, 256, 1.0)])
+def test_sparqle_matmul_packed_bitexact_vs_unpacked(m, k, n, s):
+    """The packed-plane kernel must reproduce the unpacked kernel bit for
+    bit on all-int8 inputs — same tile body, in-VMEM unpack."""
+    x, w, asc, wsc = _mk_inputs(jax.random.PRNGKey(13), m, k, n, s)
+    a = encode(x)
+    pop = tile_population(a.pbm, 128, 128)
+    ref = sparqle_matmul(a.lsb4, a.msb4, pop, w, asc, wsc)
+    out = sparqle_matmul_packed(
+        packing_lib.pack_nibbles(a.lsb4), packing_lib.pack_nibbles(a.msb4),
+        pop, w, asc, wsc)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_sparqle_matmul_packed_exhaustive_nibbles():
+    """All 256 int8 values through the packed path: exact vs the jnp
+    oracle (the acceptance-criterion sweep)."""
+    # every int8 value appears: the full ramp reshaped to a 128x128 tile
+    x = jnp.arange(-128, 128, dtype=jnp.int8).reshape(2, 128).repeat(64, 0)
+    w = jax.random.randint(jax.random.PRNGKey(1), (128, 128), -8, 8,
+                           dtype=jnp.int8)
+    asc = jnp.ones((128, 1)); wsc = jnp.ones((1, 128))
+    a = encode(x)
+    pop = tile_population(a.pbm, 128, 128)
+    out = sparqle_matmul_packed(
+        packing_lib.pack_nibbles(a.lsb4), packing_lib.pack_nibbles(a.msb4),
+        pop, w, asc, wsc)
+    ref = quant_matmul_ref(x, w, asc, wsc)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_sparqle_linear_wire_formats_bitexact():
+    """ops.sparqle_linear produces identical outputs for both activation
+    wire formats (packed path shares the kernel body)."""
+    x = jax.random.normal(jax.random.PRNGKey(21), (64, 192))
+    w = quantize_weights(
+        jax.random.normal(jax.random.PRNGKey(22), (192, 96)) * 0.1,
+        bits=4, axis=0)
+    a = sparqle_linear(x, w, wire_format="unpacked")
+    b = sparqle_linear(x, w, wire_format="packed")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sparqle_encode_packed_kernel_matches_codec():
+    """The packed drain kernel emits exactly the core/packing.py layout."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (256, 256)) * 30
+    scale = jnp.abs(jax.random.normal(jax.random.PRNGKey(6), (256, 1))) + 0.5
+    lp, mp, words, pop = sparqle_encode_packed(x, scale)
+    l, m_, pbm, pop_ref = sparqle_encode(x, scale)
+    np.testing.assert_array_equal(
+        np.asarray(packing_lib.unpack_nibbles(lp, signed=False)),
+        np.asarray(l))
+    np.testing.assert_array_equal(
+        np.asarray(packing_lib.unpack_nibbles(mp, signed=True)),
+        np.asarray(m_))
+    np.testing.assert_array_equal(
+        np.asarray(packing_lib.unpack_pbm(words, 256)), np.asarray(pbm))
+    np.testing.assert_array_equal(np.asarray(pop), np.asarray(pop_ref))
+
+
+def test_sparqle_encode_zero_scale_rows():
+    """Zero (or denormal) per-token scales must encode to exact zeros, not
+    the ±127 garbage inf/nan rounding used to produce — the padded-prefill
+    null-page case."""
+    x = jnp.zeros((128, 128))
+    for s0 in (0.0, 1e-40):           # zero and denormal divisors
+        scale = jnp.full((128, 1), s0)
+        lsb, msb, pbm, pop = sparqle_encode(x, scale)
+        assert int(jnp.abs(lsb).sum()) == 0
+        assert int(jnp.abs(msb).sum()) == 0
+        assert not bool(pbm.any()) and int(pop.sum()) == 0
+    # a zero-scale row among live rows is guarded row-wise
+    xm = jax.random.normal(jax.random.PRNGKey(0), (128, 128)) * 20
+    xm = xm.at[3].set(0.0)
+    scale = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (128, 1))) + 0.5
+    scale = scale.at[3].set(0.0)
+    lsb, msb, _, _ = sparqle_encode(xm, scale)
+    assert int(jnp.abs(lsb[3]).sum()) == 0 and int(jnp.abs(msb[3]).sum()) == 0
+    q = jnp.clip(jnp.round(xm[4] / scale[4]), -128, 127).astype(jnp.int8)
+    lref, mref, _ = sparqle_encode_ref(q)
+    np.testing.assert_array_equal(np.asarray(lsb[4]), np.asarray(lref))
 
 
 @pytest.mark.parametrize("bm,bk", [(128, 128), (128, 256)])

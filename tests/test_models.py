@@ -18,6 +18,17 @@ from repro.optim.adamw import OptConfig, init_opt_state
 
 ALL = sorted(SMOKES)
 
+# heavy smoke archs (deep scans / MoE dispatch / SSD hybrids): several
+# compile-minutes each -> excluded from the CI fast job via @slow
+SLOW_ARCHS = {"jamba-v0.1-52b", "deepseek-v3-671b", "deepseek-moe-16b",
+              "gemma3-27b"}
+
+
+def _mark_slow(names):
+    return [pytest.param(n, marks=pytest.mark.slow) if n in SLOW_ARCHS
+            else n for n in names]
+
+
 
 def _batch(cfg: ModelConfig, b=2, s=24, key=0, train=True):
     k = jax.random.PRNGKey(key)
@@ -40,7 +51,7 @@ def _batch(cfg: ModelConfig, b=2, s=24, key=0, train=True):
     return out
 
 
-@pytest.mark.parametrize("name", ALL)
+@pytest.mark.parametrize("name", _mark_slow(ALL))
 def test_smoke_forward(name):
     cfg = SMOKES[name]
     params = init_params(build_schema(cfg), jax.random.PRNGKey(0))
@@ -52,7 +63,7 @@ def test_smoke_forward(name):
     assert not np.isnan(np.asarray(logits, dtype=np.float32)).any()
 
 
-@pytest.mark.parametrize("name", ALL)
+@pytest.mark.parametrize("name", _mark_slow(ALL))
 def test_smoke_train_step(name):
     cfg = SMOKES[name]
     params = init_params(build_schema(cfg), jax.random.PRNGKey(0))
@@ -67,9 +78,8 @@ def test_smoke_train_step(name):
     assert float(m2["loss"]) < float(m["loss"]) + 1.0  # no blow-up
 
 
-@pytest.mark.parametrize("name",
-                         [n for n in ALL
-                          if SMOKES[n].family not in ("encoder",)])
+@pytest.mark.parametrize("name", _mark_slow(
+    [n for n in ALL if SMOKES[n].family not in ("encoder",)]))
 def test_smoke_decode_consistency(name):
     """prefill + decode == forward on the extended sequence (tight KV)."""
     cfg = SMOKES[name].replace(kv_bits=8)
@@ -97,8 +107,8 @@ def test_smoke_decode_consistency(name):
     assert rel < 0.12, rel
 
 
-@pytest.mark.parametrize("name", ["granite-8b", "deepseek-moe-16b",
-                                  "jamba-v0.1-52b", "mamba2-2.7b"])
+@pytest.mark.parametrize("name", _mark_slow(
+    ["granite-8b", "deepseek-moe-16b", "jamba-v0.1-52b", "mamba2-2.7b"]))
 def test_smoke_sparqle_serving(name):
     """SPARQLe-served forward: close to float where the architecture
     permits, and ALWAYS exactly equal to the dense-quantized mode (the

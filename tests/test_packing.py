@@ -1,0 +1,164 @@
+"""Packed sub-precision wire format: exact inverses, layout semantics,
+measured-vs-Eq.1 byte accounting (docs/format.md)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:      # degrade to seeded fixed examples
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import packing as P
+from repro.core.sparqle import encode, encoded_bytes, subprecision_sparsity
+
+
+def test_roundtrip_all_int8_values():
+    """decode_packed(encode_packed(x)) is the identity on every
+    representable int8 value."""
+    x = jnp.arange(-128, 128, dtype=jnp.int8).reshape(8, 32)
+    p = P.encode_packed(x)
+    np.testing.assert_array_equal(np.asarray(P.decode_packed(p)),
+                                  np.asarray(x))
+
+
+@pytest.mark.parametrize("shape", [(3, 7), (2, 31), (4, 32), (7, 129)])
+def test_roundtrip_odd_and_tile_edge_shapes(shape):
+    """K-padding is invisible: odd K, just-below/above word boundaries."""
+    x = jax.random.randint(jax.random.PRNGKey(hash(shape) % 2**31), shape,
+                           -128, 128, dtype=jnp.int8)
+    p = P.encode_packed(x)
+    assert p.lsb4.shape[-1] * 2 == P.pad_k(shape[1])
+    np.testing.assert_array_equal(np.asarray(P.decode_packed(p)),
+                                  np.asarray(x))
+
+
+@pytest.mark.property
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([(4, 64), (3, 50)]))
+def test_roundtrip_random(seed, shape):
+    x = jax.random.randint(jax.random.PRNGKey(seed), shape, -128, 128,
+                           dtype=jnp.int8)
+    assert (P.decode_packed(P.encode_packed(x)) == x).all()
+
+
+def test_unpack_planes_matches_plane_codec():
+    """The packed format and the dense-plane codec describe the same
+    decomposition: unpack_planes == sparqle.encode on every value."""
+    x = jnp.arange(-128, 128, dtype=jnp.int8).reshape(4, 64)
+    a = P.unpack_planes(P.encode_packed(x))
+    ref = encode(x)
+    np.testing.assert_array_equal(np.asarray(a.lsb4), np.asarray(ref.lsb4))
+    np.testing.assert_array_equal(np.asarray(a.msb4), np.asarray(ref.msb4))
+    np.testing.assert_array_equal(np.asarray(a.pbm), np.asarray(ref.pbm))
+
+
+def test_nibble_pair_layout():
+    """Byte j holds column 2j in its low nibble, 2j+1 in its high nibble."""
+    x = jnp.asarray([[0x1, 0x2, 0xF, 0x0]], jnp.int8)   # lsb-only values
+    packed = P.pack_nibbles(x)
+    np.testing.assert_array_equal(np.asarray(packed).astype(np.uint8),
+                                  [[0x21, 0x0F]])
+    np.testing.assert_array_equal(
+        np.asarray(P.unpack_nibbles(packed, signed=False)), np.asarray(x))
+
+
+def test_signed_nibble_unpack_sign_extends():
+    nib = jnp.asarray([[-8, 7, -1, 0]], jnp.int8)
+    back = P.unpack_nibbles(P.pack_nibbles(nib), signed=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(nib))
+
+
+def test_pbm_word_layout_little_endian():
+    """Bit i of word w is the PBM of column 32*w + i."""
+    pbm = jnp.zeros((1, 64), bool).at[0, 0].set(True).at[0, 33].set(True)
+    words = np.asarray(P.pack_pbm(pbm))
+    assert words.dtype == np.uint32
+    np.testing.assert_array_equal(words, [[1, 2]])
+    np.testing.assert_array_equal(np.asarray(P.unpack_pbm(P.pack_pbm(pbm),
+                                                          64)),
+                                  np.asarray(pbm))
+
+
+def test_msb_stream_is_bitmap_indexed_and_compact():
+    """Stream nibble r belongs to the column of the r-th set PBM bit, in
+    column order; unused container nibbles stay zero."""
+    x = jnp.zeros((1, 32), jnp.int8)
+    x = x.at[0, 3].set(0x50).at[0, 10].set(-128).at[0, 20].set(0x20)
+    # msb4 values: col3 -> 5, col10 -> -8, col20 -> 2
+    p = P.encode_packed(x)
+    np.testing.assert_array_equal(np.asarray(p.msb_count), [3])
+    stream = np.asarray(P.unpack_nibbles(p.msb_stream, signed=True))[0]
+    np.testing.assert_array_equal(stream[:3], [5, -8, 2])
+    assert (stream[3:] == 0).all()
+    np.testing.assert_array_equal(np.asarray(P.decode_packed(p)),
+                                  np.asarray(x))
+
+
+@pytest.mark.parametrize("s", [0.0, 0.3, 0.7, 1.0])
+def test_wire_bytes_matches_eq1_within_slack(s):
+    """Measured wire bytes == Eq.1 prediction up to the PBM-word and
+    per-row stream rounding slack (< 2 % at these shapes)."""
+    key = jax.random.PRNGKey(int(s * 100))
+    k1, k2, k3 = jax.random.split(key, 3)
+    small = jax.random.randint(k1, (256, 256), 0, 16, dtype=jnp.int8)
+    big = jax.random.randint(k2, (256, 256), -128, 128, dtype=jnp.int8)
+    x = jnp.where(jax.random.uniform(k3, (256, 256)) < s, small, big)
+    x = x.astype(jnp.int8)
+    s_obs = float(subprecision_sparsity(x))
+    measured = int(P.encode_packed(x).wire_bytes())
+    predicted = encoded_bytes(x.shape, s_obs)
+    assert abs(measured - predicted) / predicted < 0.02, (measured,
+                                                         predicted)
+
+
+def test_wire_bytes_measured_rows_consistent_with_codec():
+    x = jax.random.randint(jax.random.PRNGKey(9), (33, 100), -128, 128,
+                           dtype=jnp.int8)
+    rows = P.measured_wire_bytes_rows(x)
+    assert rows.shape == (33,)
+    assert int(rows.sum()) == int(P.encode_packed(x).wire_bytes())
+
+
+def test_wire_bytes_bounds():
+    """Fully sub-precision-sparse rows pay LSB+PBM only; fully dense rows
+    pay the full MSB plane too — and both stay below dense int8 + PBM."""
+    m, k = 64, 256
+    sparse = P.encode_packed(jnp.zeros((m, k), jnp.int8))
+    dense = P.encode_packed(jnp.full((m, k), 127, jnp.int8))
+    assert int(sparse.wire_bytes()) == m * (k // 2 + k // 8)
+    assert int(dense.wire_bytes()) == m * (k // 2 + k // 8 + k // 2)
+    assert int(dense.wire_bytes()) < dense.dense_bytes() + m * k // 8 + 1
+
+
+def test_container_vs_wire_accounting():
+    """The device container is worst-case sized; wire_bytes is measured
+    and data-dependent."""
+    x = jnp.zeros((8, 64), jnp.int8).at[0, 0].set(127)
+    p = P.encode_packed(x)
+    assert int(p.wire_bytes()) < p.container_bytes()
+    # exactly one nonzero MSB nibble -> one stream byte in total
+    assert int(p.wire_bytes()) == 8 * (32 + 8) + 1
+
+
+def test_encode_packed_jittable():
+    x = jax.random.randint(jax.random.PRNGKey(0), (16, 96), -128, 128,
+                           dtype=jnp.int8)
+    p = jax.jit(P.encode_packed)(x)
+    np.testing.assert_array_equal(np.asarray(jax.jit(P.decode_packed)(p)),
+                                  np.asarray(x))
+
+
+def test_planes_packed_roundtrip():
+    """Kernel operand form: both packed planes unpack to the reference
+    decomposition."""
+    x = jax.random.randint(jax.random.PRNGKey(4), (8, 128), -128, 128,
+                           dtype=jnp.int8)
+    lsbp, msbp = P.planes_packed(P.encode_packed(x))
+    ref = encode(x)
+    np.testing.assert_array_equal(
+        np.asarray(P.unpack_nibbles(lsbp, signed=False)),
+        np.asarray(ref.lsb4))
+    np.testing.assert_array_equal(
+        np.asarray(P.unpack_nibbles(msbp, signed=True)),
+        np.asarray(ref.msb4))

@@ -21,10 +21,14 @@ CFG = ModelConfig(name="tiny-serve", family="transformer", n_layers=2,
 
 
 @pytest.fixture(scope="module")
-def qparams():
-    params = init_params(build_schema(CFG), jax.random.PRNGKey(0))
+def fparams():
+    return init_params(build_schema(CFG), jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def qparams(fparams):
     return quantize_model_params(
-        params, w_bits=4, k_percent=50.0, clip_l=-8.0, clip_h=23.0,
+        fparams, w_bits=4, k_percent=50.0, clip_l=-8.0, clip_h=23.0,
         mode="sparqle", enable_clipping=True, tile_k=16)
 
 
@@ -72,6 +76,70 @@ def test_pool_eviction_hook_fires():
     assert pool.evictions == 1 and pool.num_free == 7
 
 
+def test_pool_evict_unknown_owner_is_noop():
+    """Evicting an owner that holds no pages must not bump the eviction
+    counter or fire the hook (scheduler churn can retry a preemption
+    after the victim already released)."""
+    pool = PagedKVPool(CFG, PoolConfig(n_pages=8, page_size=4))
+    fired = []
+    pool.on_evict = lambda owner, pgs: fired.append(owner)
+    assert pool.evict("never-allocated") == []
+    assert pool.evictions == 0 and fired == []
+    # a real eviction still counts
+    pool.allocate(2, owner="a")
+    pool.evict("a")
+    assert pool.evictions == 1 and fired == ["a"]
+    # ... and evicting the same owner again is a no-op
+    assert pool.evict("a") == []
+    assert pool.evictions == 1 and fired == ["a"]
+
+
+def test_pool_zero_page_allocate_no_phantom_owner():
+    """allocate(0, owner) must not create an ownership entry: release()
+    and evict() treat map presence as 'holds pages', so a phantom entry
+    drifts the ownership map under scheduler churn."""
+    pool = PagedKVPool(CFG, PoolConfig(n_pages=8, page_size=4))
+    assert pool.allocate(0, owner="ghost") == []
+    assert "ghost" not in pool._owned
+    assert pool.pages_of("ghost") == []
+    assert pool.evict("ghost") == [] and pool.evictions == 0
+    # zero-grab on an EXISTING owner leaves its pages untouched
+    pages = pool.allocate(2, owner="real")
+    assert pool.allocate(0, owner="real") == []
+    assert pool.pages_of("real") == pages
+
+
+def test_pool_msb_sparsity_all_16_nibble_values():
+    """Regression for the signed-nibble criterion: sub-precision nibbles
+    are exactly those in [KV2_LOW, KV2_HIGH] = [-2, 1] (signed int2
+    range). The old arithmetic-shift test (nib >> 2 == 0) wrongly
+    excluded -2 and -1 (and counted 2 and 3, which need 3 signed bits)."""
+    from repro.serving.kv_pool import KV2_LOW, KV2_HIGH
+    assert (KV2_LOW, KV2_HIGH) == (-2, 1)
+    for v in range(-8, 8):
+        pool = PagedKVPool(CFG, PoolConfig(n_pages=4, page_size=4))
+        byte = np.uint8((v & 0xF) | ((v & 0xF) << 4)).astype(np.int8)
+        pool.state = jax.tree_util.tree_map(
+            lambda a: (a.at[:, 1].set(byte) if a.dtype == jnp.int8 else a),
+            pool.state)
+        s = pool.page_msb_sparsity([1])
+        expected = 1.0 if KV2_LOW <= v <= KV2_HIGH else 0.0
+        np.testing.assert_allclose(s, [expected], err_msg=f"nibble {v}")
+
+
+def test_pool_msb_sparsity_mixed_nibbles_fraction():
+    """A page holding every int4 value equally often reports 4/16."""
+    pool = PagedKVPool(CFG, PoolConfig(n_pages=4, page_size=4))
+    nibbles = np.arange(-8, 8, dtype=np.int8)          # all 16 values
+    seq = np.tile(nibbles, 4)                          # 64 nibbles/page leaf
+    packed = ((seq[0::2] & 0xF) | ((seq[1::2] & 0xF) << 4)).astype(np.int8)
+    page = jnp.asarray(packed.reshape(4, 2, 4))        # (ps, kvh, hd/2)
+    pool.state = jax.tree_util.tree_map(
+        lambda a: (a.at[:, 1].set(page) if a.dtype == jnp.int8 else a),
+        pool.state)
+    np.testing.assert_allclose(pool.page_msb_sparsity([1]), [4 / 16])
+
+
 def test_pool_msb_sparsity_telemetry():
     pool = PagedKVPool(CFG, PoolConfig(n_pages=4, page_size=4))
     # zero-initialized nibbles are all sub-precision (value 0)
@@ -90,6 +158,7 @@ def test_pool_msb_sparsity_telemetry():
 # paged kernel vs contiguous kernel
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("b,s,kvh,g,hd,ps", [
     (2, 256, 2, 4, 32, 64), (1, 256, 1, 2, 16, 128),
 ])
@@ -135,6 +204,7 @@ def test_paged_kernel_bitexact_vs_contiguous(b, s, kvh, g, hd, ps):
 # engine vs legacy
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_engine_matches_legacy_8_staggered_requests(qparams):
     """8 staggered requests of different lengths through the continuous-
     batching engine produce the same greedy tokens as the legacy
@@ -160,10 +230,49 @@ def test_engine_matches_legacy_8_staggered_requests(qparams):
         st = h.stats()
         assert np.isfinite(st["ttft_s"]) and np.isfinite(st["tpot_s"])
         assert 0.0 <= st["act_sparsity"] <= 1.0
+        # measured wire-format accounting rides along per request
+        assert np.isfinite(st["act_wire_bytes_per_token"])
+        assert st["act_wire_bytes_per_token"] > 0
+        assert np.isfinite(st["act_wire_compression_pct"])
     # backfilled slots: 8 requests through 4 slots, everything released
     assert eng.pool.num_free == eng.pool.n_usable_pages
+    # ... and per-layer in aggregate: one entry per transformer layer
+    agg = eng.aggregate_stats()
+    assert len(agg["layer_wire_bytes_per_token"]) == CFG.n_layers
+    assert all(b > 0 for b in agg["layer_wire_bytes_per_token"])
+    # dense baseline per layer-input row is d_model bytes
+    assert all(abs(d - CFG.d_model) < 1e-6
+               for d in agg["layer_dense_bytes_per_token"])
+    assert agg["wire_bytes_total"] > 0
 
 
+@pytest.mark.slow
+def test_engine_packed_wire_format_matches_unpacked(fparams, qparams):
+    """Serving with wire_format='packed' (activations round-trip the
+    packed codec before every projection) produces the same greedy tokens
+    as the unpacked path — the codec is exact, so the format change is
+    invisible to the math."""
+    qp_packed = quantize_model_params(
+        fparams, w_bits=4, k_percent=50.0, clip_l=-8.0, clip_h=23.0,
+        mode="sparqle", enable_clipping=True, tile_k=16,
+        wire_format="packed")
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(0, CFG.vocab, size=n).tolist() for n in (11, 18)]
+    outs = []
+    for qp in (qparams, qp_packed):
+        eng = Engine(CFG, qp,
+                     pool_config=PoolConfig(n_pages=16, page_size=8),
+                     sched_config=SchedulerConfig(
+                         max_decode_batch=2, token_budget=64,
+                         prefill_chunk=32, max_pages_per_seq=8))
+        hs = [eng.submit(p, SamplingParams(max_new_tokens=5))
+              for p in prompts]
+        eng.run()
+        outs.append([h.out_tokens for h in hs])
+    assert outs[0] == outs[1]
+
+
+@pytest.mark.slow
 def test_engine_chunked_prefill_completes(qparams):
     """A prompt longer than the chunk is prefilled across several steps
     (interleaving with decodes) and still completes."""
@@ -183,6 +292,7 @@ def test_engine_chunked_prefill_completes(qparams):
     assert eng.steps >= 3
 
 
+@pytest.mark.slow
 def test_prefill_chunk_boundary_mask_oracle(qparams):
     """The past/chunk attention boundary of _attn_prefill_chunk_paged,
     checked against an independent naive reference with *exactly
@@ -229,6 +339,7 @@ def test_prefill_chunk_boundary_mask_oracle(qparams):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_chunked_prefill_pool_writes_chunk_invariant(qparams):
     """Quantize-on-write must not depend on chunking: after prefilling the
     same prompt in 1, 2, or 5 chunks, the first layer's page contents are
@@ -263,6 +374,7 @@ def test_chunked_prefill_pool_writes_chunk_invariant(qparams):
         assert np.abs(lg1 - lgN).max() < 0.05, chunks
 
 
+@pytest.mark.slow
 def test_engine_preemption_under_page_pressure(qparams):
     """A pool too small for the working set preempts (evicts + recomputes)
     rather than deadlocking, and every request still finishes."""
@@ -280,6 +392,7 @@ def test_engine_preemption_under_page_pressure(qparams):
     assert sum(h.stats()["preemptions"] for h in hs) > 0
 
 
+@pytest.mark.slow
 def test_engine_stream_and_temperature(qparams):
     """stream() yields tokens as they are produced; temperature sampling
     is seeded and in-vocab."""
@@ -295,6 +408,30 @@ def test_engine_stream_and_temperature(qparams):
     got = list(eng.stream(h))
     assert got == h.out_tokens and len(got) == 5
     assert all(0 <= t < CFG.vocab for t in got)
+
+
+def test_decode_paged_telemetry_covers_every_sublayer():
+    """Per-layer telemetry must have one entry per LAYER, not per scanned
+    period: a GQA MoE config with moe_every=2 (period length 2) passes
+    check_paged_support and must still report n_layers wire-byte rows."""
+    cfg = ModelConfig(name="tiny-moe-serve", family="moe", n_layers=4,
+                      d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                      d_ff=64, vocab=64, dtype="float32", n_experts=4,
+                      top_k=2, moe_every=2, moe_d_ff=32,
+                      router_type="softmax")
+    M.check_paged_support(cfg)
+    from repro.serving.kv_pool import PagedKVPool, PoolConfig
+    params = init_params(build_schema(cfg), jax.random.PRNGKey(1))
+    pool = PagedKVPool(cfg, PoolConfig(n_pages=4, page_size=4))
+    token = jnp.zeros((2,), jnp.int32)
+    pos = jnp.zeros((2,), jnp.int32)
+    tables = jnp.zeros((2, 2), jnp.int32)
+    _, _, tel = M.decode_step_paged(cfg, params, pool.state, token, pos,
+                                    tables)
+    assert tel["layer_wire_bytes"].shape == (cfg.n_layers, 2)
+    assert tel["layer_sparsity"].shape == (cfg.n_layers, 2)
+    np.testing.assert_allclose(np.asarray(tel["layer_dense_bytes"]),
+                               np.full((cfg.n_layers, 2), cfg.d_model))
 
 
 def test_scheduler_token_budget_and_fcfs():

@@ -18,6 +18,8 @@ from repro.models.schema import init_params
 from repro.models.schema_builder import build_schema
 from repro.optim.adamw import OptConfig, init_opt_state
 
+pytestmark = pytest.mark.slow  # end-to-end train/serve: minutes of jit time
+
 
 @pytest.fixture(scope="module")
 def trained():
