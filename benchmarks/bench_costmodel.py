@@ -86,6 +86,23 @@ def run(emit, calibrate_flag: bool = False) -> None:
     emit("costmodel/power_overhead_pct", ap["power_overhead_pct"],
          "paper: 7.0")
 
+    # speculative-rounds extension (serving/spec_decode.py): γ LSB-only
+    # draft steps + one batched verify, amortized over E[tokens/cycle]
+    from repro.core.costmodel import breakeven_acceptance, evaluate_speculative
+    for name, shape in PAPER_MODELS.items():
+        s = PAPER_SPARSITY[name]
+        rep = evaluate_speculative(shape, s, 2, 0.8,
+                                   hw, decode_batch=decode_batch)
+        emit(f"costmodel/{name}/spec_tpot_speedup_g2_a08",
+             rep.tpot_speedup,
+             f"gamma=2 alpha=0.8 s={s} (>1 = drafting wins)")
+        be = breakeven_acceptance(shape, s, 2, hw,
+                                  decode_batch=decode_batch)
+        emit(f"costmodel/{name}/spec_breakeven_alpha_g2",
+             be if be != float("inf") else -1.0,
+             "-1 = never wins: draft restreams the full weight/KV "
+             "stream under the §4 dataflow (docs/serving.md)")
+
 
 # committed operating point (see --calibrate; re-derived in EXPERIMENTS.md)
 CALIB_DECODE_BATCH = 24

@@ -96,24 +96,37 @@ class PhaseCost:
 ZERO = PhaseCost(0.0, 0.0, 0.0, 0.0, 0.0)
 
 
-def _act_bytes_per_elem(sparqle: bool, s: float, a_bits: int) -> float:
+def _act_bytes_per_elem(sparqle: bool, s: float, a_bits: int,
+                        lsb_only: bool = False) -> float:
     if not sparqle:
         return a_bits / 8.0
     half = a_bits / 16.0               # p/2 bits -> bytes
+    if lsb_only:
+        return half                    # draft streams the LSB plane alone
     return half + 1.0 / 8.0 + (1.0 - s) * half  # LSB + PBM + compressed MSB
 
 
 def linear_cost(
-    shape: LinearShape, hw: HardwareConfig, sparqle: bool
+    shape: LinearShape, hw: HardwareConfig, sparqle: bool,
+    lsb_only: bool = False
 ) -> PhaseCost:
-    """Cost of one tiled linear layer execution (one of ``count``)."""
+    """Cost of one tiled linear layer execution (one of ``count``).
+
+    ``lsb_only`` models the self-speculative *draft* forward: the sparse
+    MSB4 pass is statically elided, so an eligible linear costs exactly
+    1 compute round (vs 1 + (1 - s) for the full hybrid pass) and streams
+    only the LSB plane (p/2 bits/elem — no PBM, no compacted MSB).
+    """
     m, k, n = shape.m, shape.k, shape.n
     macs = m * k * n
     use_sparqle = sparqle and shape.sparqle_eligible and shape.a_bits == 8
+    draft = lsb_only and use_sparqle
 
     # ---- compute rounds on Int4 MACs (paper §3.3) ----
     base_rounds = max(1, shape.a_bits // 4)  # int8 ops take 2 rounds
-    if use_sparqle:
+    if draft:
+        rounds = 1.0                         # dense LSB4 pass only
+    elif use_sparqle:
         rounds = 1.0 + (1.0 - shape.s)       # dense LSB4 + sparse MSB4
     else:
         rounds = float(base_rounds)
@@ -122,12 +135,13 @@ def linear_cost(
     # ---- SRAM-level traffic with tiled reuse ----
     n_reload = max(1.0, n / hw.tile_n)       # act reloads across N tiles
     m_reload = max(1.0, m / hw.tile_m)       # weight reloads across M tiles
-    a_bpe = _act_bytes_per_elem(use_sparqle, shape.s, shape.a_bits)
+    a_bpe = _act_bytes_per_elem(use_sparqle, shape.s, shape.a_bits, draft)
     act_bytes = m * k * n_reload * a_bpe
     w_bytes = k * n * m_reload * (shape.w_bits / 8.0)
     load_bytes = act_bytes + w_bytes
-    # outputs drained re-encoded (SPARQLe) or int8 (baseline)
-    out_bpe = _act_bytes_per_elem(use_sparqle, shape.s, 8)
+    # outputs drained re-encoded (SPARQLe) or int8 (baseline); the draft
+    # drains LSB-only re-encoded streams too
+    out_bpe = _act_bytes_per_elem(use_sparqle, shape.s, 8, draft)
     drain_bytes = m * n * out_bpe
 
     load_cycles = load_bytes / hw.load_bw
@@ -146,12 +160,13 @@ def linear_cost(
 
 
 def phase_cost(
-    layers: List[LinearShape], hw: HardwareConfig, sparqle: bool
+    layers: List[LinearShape], hw: HardwareConfig, sparqle: bool,
+    lsb_only: bool = False
 ) -> PhaseCost:
     """Sequential multi-layer execution (paper §4: 'modeled as sequential')."""
     total = ZERO
     for l in layers:
-        c = linear_cost(l, hw, sparqle)
+        c = linear_cost(l, hw, sparqle, lsb_only)
         total = total + PhaseCost(
             c.cycles * l.count, c.energy_pj * l.count,
             c.load_bytes * l.count, c.compute_macs * l.count,
@@ -294,6 +309,140 @@ def area_power_overhead(hw: Optional[HardwareConfig] = None) -> Dict[str, float]
         "area_overhead_pct": (hw.sparqle_area_ovh - 1.0) * 100.0,
         "power_overhead_pct": (hw.sparqle_power_ovh - 1.0) * 100.0,
     }
+
+
+# ---------------------------------------------------------------------------
+# Self-speculative decoding (serving/spec_decode.py): analytical win region
+# ---------------------------------------------------------------------------
+
+def expected_tokens_per_step(alpha: float, gamma: int) -> float:
+    """E[tokens emitted per draft+verify cycle] under per-token acceptance
+    probability ``alpha`` with a γ-token greedy draft window:
+    sum_{k=0}^{γ} α^k (k accepted drafts + the correction/bonus token)."""
+    if not 0.0 <= alpha <= 1.0:
+        raise ValueError(alpha)
+    return sum(alpha ** k for k in range(gamma + 1))
+
+
+@dataclasses.dataclass
+class SpeculativeReport:
+    """Analytical TPOT of γ-draft self-speculative decoding vs sequential.
+
+    One speculative cycle = γ single-token LSB4-only draft steps (1 compute
+    round per eligible linear) + one (γ+1)-token batched full-precision
+    verify step (1 + (1 - s) rounds), amortized over E[tokens/cycle].
+    """
+
+    model: str
+    gamma: int
+    alpha: float                       # per-token draft acceptance prob
+    s: float                           # MSB4 sparsity feeding the costs
+    draft_step: PhaseCost              # ONE single-token LSB-only step
+    verify_step: PhaseCost             # ONE (γ+1)-token batched full step
+    baseline_step: PhaseCost           # ONE non-speculative full step
+
+    @property
+    def expected_tokens(self) -> float:
+        return expected_tokens_per_step(self.alpha, self.gamma)
+
+    @property
+    def spec_cycles_per_token(self) -> float:
+        cyc = self.gamma * self.draft_step.cycles + self.verify_step.cycles
+        return cyc / self.expected_tokens
+
+    @property
+    def baseline_cycles_per_token(self) -> float:
+        return self.baseline_step.cycles
+
+    @property
+    def tpot_speedup(self) -> float:
+        """> 1.0 means γ-drafting wins on decode latency."""
+        return self.baseline_cycles_per_token / self.spec_cycles_per_token
+
+    @property
+    def spec_energy_per_token(self) -> float:
+        e = self.gamma * self.draft_step.energy_pj + self.verify_step.energy_pj
+        return e / self.expected_tokens
+
+    def improvements(self) -> Dict[str, float]:
+        return {
+            "tpot_speedup": self.tpot_speedup,
+            "tpot_latency_pct": (1.0 - self.spec_cycles_per_token
+                                 / self.baseline_cycles_per_token) * 100.0,
+            "decode_energy_pct": (1.0 - self.spec_energy_per_token
+                                  / self.baseline_step.energy_pj) * 100.0,
+            "expected_tokens_per_step": self.expected_tokens,
+        }
+
+
+def evaluate_speculative(
+    model: LMShape,
+    s: float,
+    gamma: int,
+    alpha: float,
+    hw: Optional[HardwareConfig] = None,
+    *,
+    decode_batch: int = 16,
+    decode_kv_len: int = 2048,
+) -> SpeculativeReport:
+    """Speculative vs sequential decode on the SPARQLe accelerator.
+
+    ``s`` is the measured MSB4 sparsity (drives the verify/baseline round
+    count 1 + (1 - s) and the wire bytes); ``alpha`` the measured per-token
+    draft acceptance rate (``Request.stats()['spec_acceptance_rate']``).
+    The verify step batches γ+1 window tokens per sequence, so its linears
+    see ``decode_batch * (γ+1)`` rows while attention still walks the same
+    KV length.
+    """
+    if gamma < 1:
+        raise ValueError(gamma)
+    hw = hw or HardwareConfig()
+    one_tok = lm_linear_layers(model, decode_batch, s,
+                               seq_for_attn=decode_kv_len, decode=True)
+    window = lm_linear_layers(model, decode_batch * (gamma + 1), s,
+                              seq_for_attn=decode_kv_len, decode=True)
+    return SpeculativeReport(
+        model=model.name, gamma=gamma, alpha=alpha, s=s,
+        draft_step=phase_cost(one_tok, hw, sparqle=True, lsb_only=True),
+        verify_step=phase_cost(window, hw, sparqle=True),
+        baseline_step=phase_cost(one_tok, hw, sparqle=True),
+    )
+
+
+def breakeven_acceptance(
+    model: LMShape,
+    s: float,
+    gamma: int,
+    hw: Optional[HardwareConfig] = None,
+    *,
+    decode_batch: int = 16,
+    decode_kv_len: int = 2048,
+    tol: float = 1e-4,
+) -> float:
+    """Minimum per-token acceptance rate at which γ-drafting wins.
+
+    Bisects α in [0, 1] for ``tpot_speedup == 1``; returns ``inf`` when
+    even α = 1 loses (the draft+verify overhead exceeds the window) and
+    0 when α = 0 already wins (possible when batching the verify step is
+    itself cheaper per token than sequential decode). This is the
+    cost-model answer to "when does LSB4-only drafting pay off?" as a
+    function of the measured MSB sparsity ``s``.
+    """
+    rep = evaluate_speculative(model, s, gamma, 1.0, hw,
+                               decode_batch=decode_batch,
+                               decode_kv_len=decode_kv_len)
+    if rep.tpot_speedup < 1.0:
+        return float("inf")
+    lo, hi = 0.0, 1.0
+    if dataclasses.replace(rep, alpha=0.0).tpot_speedup >= 1.0:
+        return 0.0
+    while hi - lo > tol:
+        mid = (lo + hi) / 2.0
+        if dataclasses.replace(rep, alpha=mid).tpot_speedup >= 1.0:
+            hi = mid
+        else:
+            lo = mid
+    return hi
 
 
 # Paper-reported operating points (§5.1), used by calibration & validation.

@@ -16,6 +16,7 @@ run quantized (the "complementary to quantization" contribution of §1).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import re
 from typing import Any, Dict, Optional
@@ -28,6 +29,32 @@ from repro.core.packing import encode_packed, unpack_planes
 from repro.core.quantize import (QuantizedTensor, quantize_activations,
                                  quantize_weights)
 from repro.core.sparqle import encode
+
+
+# Trace-time draft-mode flag (self-speculative decoding): while True, every
+# sparqle-mode projection runs LSB4-only — the sparse MSB pass is elided
+# from the traced program entirely, so a jitted function traced under
+# msb_skip_scope() IS the 1-compute-round draft forward (paper §3.3: the
+# full hybrid pass costs 1 + (1 - s) rounds). Read at trace time only; it
+# must wrap the whole trace (e.g. the body of a jitted step function),
+# not individual calls of an already-compiled one.
+_MSB_SKIP = False
+
+
+@contextlib.contextmanager
+def msb_skip_scope(enabled: bool = True):
+    """Trace every sparqle projection in LSB4-only (draft) mode."""
+    global _MSB_SKIP
+    prev = _MSB_SKIP
+    _MSB_SKIP = enabled
+    try:
+        yield
+    finally:
+        _MSB_SKIP = prev
+
+
+def msb_skip_active() -> bool:
+    return _MSB_SKIP
 
 
 def pack_int4(q: jax.Array, axis: int = -2) -> jax.Array:
@@ -108,13 +135,18 @@ class SparqleLinear:
 
 
 def _dual_pass_matmul(q: jax.Array, wq: jax.Array, batched: bool,
-                      wire_format: str = "unpacked") -> jax.Array:
+                      wire_format: str = "unpacked",
+                      msb_skip: bool = False) -> jax.Array:
     """int8 SPARQLe activations x int-weights -> int32, dual nibble passes.
 
     ``wire_format='packed'`` round-trips the activations through the packed
     sub-precision wire format first, making the wire layout — not the dense
     int8 tensor — the source of truth the matmul consumes. The codec is an
     exact inverse pair, so both formats produce bit-identical accumulators.
+
+    ``msb_skip`` drops the sparse pass from the traced program: the result
+    is the dense LSB4 contribution alone (equal to dequantizing the LSB
+    plane by itself), the draft forward of self-speculative decoding.
     """
     if wire_format == "packed":
         pa = encode_packed(q.reshape(-1, q.shape[-1]))
@@ -130,6 +162,8 @@ def _dual_pass_matmul(q: jax.Array, wq: jax.Array, batched: bool,
         dims = (((1,), (0,)), ((), ()))
     dense = jax.lax.dot_general(lsb, wq, dims,
                                 preferred_element_type=jnp.int32)
+    if msb_skip:
+        return dense
     sparse = jax.lax.dot_general(msb, wq, dims,
                                  preferred_element_type=jnp.int32)
     return dense + sparse * 16
@@ -180,7 +214,8 @@ def _quantized_apply(x: jax.Array, sl: SparqleLinear,
         q = apply_clipping(q, mask, sl.l, sl.h)
     wq = sl.unpacked_q()
     if sl.mode == "sparqle":
-        acc = _dual_pass_matmul(q, wq, batched, sl.wire_format)
+        acc = _dual_pass_matmul(q, wq, batched, sl.wire_format,
+                                msb_skip=_MSB_SKIP)
     else:
         acc = _single_pass_matmul(q, wq, batched)
     w_scale = sl.w.scale  # (1, N) or (E, 1, N) per-output-channel

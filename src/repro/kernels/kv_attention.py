@@ -15,7 +15,7 @@ block of ``bs`` tokens (innermost, 'arbitrary'): running max/denominator
 and the (G, hd) output accumulator live in VMEM scratch across the cache
 scan — the standard flash-decoding structure re-tiled for VMEM.
 
-Two cache layouts share the same kernel body:
+Three entry points share the same kernel body (``_flash_step``):
 
   * :func:`kv4_decode_attention`        — contiguous (B, S, KVH, …) cache;
   * :func:`kv4_paged_decode_attention`  — a paged pool (P, page, KVH, …)
@@ -23,6 +23,13 @@ Two cache layouts share the same kernel body:
     page index feeds the DMA index map). Because the body, block shapes
     and accumulation order are identical, the paged variant is bit-exact
     against the contiguous one when the pages tile the same cache.
+  * :func:`kv4_paged_verify_attention`  — the multi-token (q > 1) variant
+    for self-speculative verification: T window tokens per sequence, each
+    causally masked to its own absolute position ``pos + t``. The window
+    axis is a *grid* dimension, so every (b, h, t) cell runs the exact
+    single-token computation (same block shapes, same dot shapes, same
+    accumulation order) — bit-exact against a loop of T single-token
+    paged decode calls by construction.
 """
 from __future__ import annotations
 
@@ -44,9 +51,15 @@ def _unpack4(q):  # int8 packed nibbles -> two sign-extended int8 planes
     return lo, hi
 
 
-def _kernel(pos_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, out_ref,
-            m_ref, l_ref, acc_ref, *, n_s: int, bs: int, scale: float):
-    s_idx = pl.program_id(2)
+def _flash_step(pos, s_idx, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, out_ref,
+                m_ref, l_ref, acc_ref, *, n_s: int, bs: int, scale: float):
+    """One cache-block step of the online-softmax scan for ONE query row
+    group. ``pos`` is the query's absolute position (a scalar), ``s_idx``
+    its place along the cache-block grid axis — every entry point maps its
+    own grid onto these two values, so the f32 computation (and therefore
+    the bits) is identical across layouts.
+    """
+    hd = out_ref.shape[-1]
 
     @pl.when(s_idx == 0)
     def _init():
@@ -54,23 +67,22 @@ def _kernel(pos_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, out_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
+    q = q_ref[...].reshape(-1, hd).astype(jnp.float32)   # (G, hd)
     # unpack + dequantize this cache block in VMEM
-    kq = kq_ref[0, :, 0, :]                              # (bs, hd//2) int8
-    ks = ks_ref[0, :, 0]                                 # (bs,)
+    kq = kq_ref[...].reshape(bs, -1)                     # (bs, hd//2) int8
+    ks = ks_ref[...].reshape(bs)
     lo, hi = _unpack4(kq)
     k_int = jnp.stack([lo, hi], axis=-1).reshape(bs, -1)  # (bs, hd)
     k = k_int.astype(jnp.float32) * ks[:, None]
-    vq = vq_ref[0, :, 0, :]
-    vs = vs_ref[0, :, 0]
+    vq = vq_ref[...].reshape(bs, -1)
+    vs = vs_ref[...].reshape(bs)
     lo_v, hi_v = _unpack4(vq)
     v_int = jnp.stack([lo_v, hi_v], axis=-1).reshape(bs, -1)
     v = v_int.astype(jnp.float32) * vs[:, None]
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    # causal validity: absolute cache position <= pos[b]
-    pos = pos_ref[0]
+    # causal validity: absolute cache position <= pos
     j = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
     s = jnp.where(j <= pos, s, NEG_INF)                  # (G, bs)
 
@@ -86,9 +98,16 @@ def _kernel(pos_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, out_ref,
 
     @pl.when(s_idx == n_s - 1)
     def _drain():
-        out_ref[0, 0] = (acc_ref[...] /
-                         jnp.maximum(l_ref[...], 1e-30)).astype(
-                             out_ref.dtype)
+        out_ref[...] = (acc_ref[...] /
+                        jnp.maximum(l_ref[...], 1e-30)).astype(
+                            out_ref.dtype).reshape(out_ref.shape)
+
+
+def _kernel(pos_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, out_ref,
+            m_ref, l_ref, acc_ref, *, n_s: int, bs: int, scale: float):
+    _flash_step(pos_ref[0], pl.program_id(2), q_ref, kq_ref, ks_ref,
+                vq_ref, vs_ref, out_ref, m_ref, l_ref, acc_ref,
+                n_s=n_s, bs=bs, scale=scale)
 
 
 @functools.partial(jax.jit,
@@ -208,4 +227,84 @@ def kv4_paged_decode_attention(
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(block_tables, pos, q, k_pages, k_scale_pages, v_pages, v_scale_pages)
+
+
+def _paged_verify_kernel(bt_ref, pos_ref, q_ref, kq_ref, ks_ref, vq_ref,
+                         vs_ref, out_ref, m_ref, l_ref, acc_ref, *, n_s,
+                         bs, scale):
+    # grid = (B, KVH, T, n_s): window token t's query position is pos + t;
+    # everything else is the shared single-token flash step, so cell
+    # (b, h, t) computes exactly what a single-token decode at pos + t
+    # would (bit-exact vs a loop of kv4_paged_decode_attention calls)
+    del bt_ref
+    _flash_step(pos_ref[0] + pl.program_id(2), pl.program_id(3), q_ref,
+                kq_ref, ks_ref, vq_ref, vs_ref, out_ref, m_ref, l_ref,
+                acc_ref, n_s=n_s, bs=bs, scale=scale)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kv4_paged_verify_attention(
+    q: jax.Array,             # (B, T, KVH, G, hd) — T window tokens/seq
+    k_pages: jax.Array,       # (P, ps, KVH, hd//2) int8, packed nibbles
+    k_scale_pages: jax.Array, # (P, ps, KVH) f32 per-token-head scales
+    v_pages: jax.Array,       # (P, ps, KVH, hd//2) int8
+    v_scale_pages: jax.Array, # (P, ps, KVH) f32
+    block_tables: jax.Array,  # (B, Pmax) int32 — seq-order page ids
+    pos: jax.Array,           # (B,) int32 — position of window token 0
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Multi-token decode attention for speculative verification.
+
+    Scores a whole draft window in one batched call: window token ``t``
+    of sequence ``b`` sits at absolute position ``pos[b] + t`` and
+    attends to cache positions ``<= pos[b] + t`` (so it sees the other
+    window tokens' K/V — the caller writes the window's K/V into the
+    pages *before* this call — but never its own future). Returns
+    (B, T, KVH, G, hd).
+
+    The window axis is a grid dimension, not a wider query block: each
+    (b, h, t) grid cell replays the single-token kernel body with the
+    same block and dot shapes, which makes the output bit-exact against
+    T sequential :func:`kv4_paged_decode_attention` calls.
+    """
+    b, t, kvh, g, hd = q.shape
+    n_pages, ps, _, hdp = k_pages.shape
+    _, n_s = block_tables.shape
+    assert hdp * 2 == hd, (hd, hdp)
+    scale = hd ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kvh, t, n_s),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ib, ih, it, isb, bt: (ib,)),    # pos
+            pl.BlockSpec((1, 1, 1, g, hd),
+                         lambda ib, ih, it, isb, bt: (ib, it, ih, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hdp),
+                         lambda ib, ih, it, isb, bt: (bt[ib, isb], 0, ih, 0)),
+            pl.BlockSpec((1, ps, 1),
+                         lambda ib, ih, it, isb, bt: (bt[ib, isb], 0, ih)),
+            pl.BlockSpec((1, ps, 1, hdp),
+                         lambda ib, ih, it, isb, bt: (bt[ib, isb], 0, ih, 0)),
+            pl.BlockSpec((1, ps, 1),
+                         lambda ib, ih, it, isb, bt: (bt[ib, isb], 0, ih)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, g, hd),
+                               lambda ib, ih, it, isb, bt: (ib, it, ih, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),     # running max
+            pltpu.VMEM((g, 1), jnp.float32),     # running denominator
+            pltpu.VMEM((g, hd), jnp.float32),    # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_verify_kernel, n_s=n_s, bs=ps, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, t, kvh, g, hd), q.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
     )(block_tables, pos, q, k_pages, k_scale_pages, v_pages, v_scale_pages)

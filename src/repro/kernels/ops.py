@@ -43,6 +43,7 @@ def sparqle_linear(
     clip_h: Optional[jax.Array] = None,
     backend: str = "pallas",
     wire_format: str = "unpacked",
+    msb_skip: bool = False,
     bm: int = DEFAULT_BM,
     bn: int = DEFAULT_BN,
     bk: int = DEFAULT_BK,
@@ -53,6 +54,9 @@ def sparqle_linear(
     ``wire_format='packed'`` streams the activation nibble planes in the
     two-per-byte wire layout (``sparqle_matmul_packed`` unpacks in-VMEM);
     bit-exact vs ``'unpacked'`` — same kernel body, half the DMA bytes.
+    ``msb_skip`` runs the 1-round LSB4-only draft forward (the sparse MSB
+    pass is statically elided from the kernel): the output is what you
+    would get dequantizing the LSB plane alone.
     """
     from repro.core.clipping import apply_clipping
 
@@ -76,8 +80,10 @@ def sparqle_linear(
         else:
             act = encode(q, 1.0)
         from repro.core.sparse_matmul import sparqle_matmul_xla
+        msb = jnp.zeros_like(act.msb4) if msb_skip else act.msb4
+        pbm = jnp.zeros_like(act.pbm) if msb_skip else act.pbm
         out = sparqle_matmul_xla(
-            SparqleActivation(act.lsb4, act.msb4, act.pbm, jnp.float32(1.0)),
+            SparqleActivation(act.lsb4, msb, pbm, jnp.float32(1.0)),
             QuantizedTensor(w.q, jnp.ones_like(w.scale), w.zero, w.bits))
         out = out * qa.scale * w.scale.reshape(1, -1)
         return out.reshape(*orig[:-1], n_out).astype(x.dtype)
@@ -94,10 +100,11 @@ def sparqle_linear(
     if wire_format == "packed":
         out = sparqle_matmul_packed(
             pack_nibbles(lsb), pack_nibbles(msb), pop, wq, asc, wsc,
-            bm=bm, bn=bn, bk=bk, interpret=interpret)
+            bm=bm, bn=bn, bk=bk, interpret=interpret, msb_skip=msb_skip)
     else:
         out = sparqle_matmul(lsb, msb, pop, wq, asc, wsc,
-                             bm=bm, bn=bn, bk=bk, interpret=interpret)
+                             bm=bm, bn=bn, bk=bk, interpret=interpret,
+                             msb_skip=msb_skip)
     out = out[:m, :n_out]
     return out.reshape(*orig[:-1], n_out).astype(x.dtype)
 

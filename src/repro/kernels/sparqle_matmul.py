@@ -55,7 +55,7 @@ DEFAULT_BN = 128
 DEFAULT_BK = 128
 
 
-def _tile_body(pop, lsb, msb_fn, w, acc_ref):
+def _tile_body(pop, lsb, msb_fn, w, acc_ref, *, msb_skip: bool = False):
     """Shared dual-pass accumulation for one (bm, bk, bn) tile.
 
     ``lsb`` is the UNPACKED (bm, bk) int8 LSB4 plane; ``msb_fn`` is a
@@ -64,10 +64,19 @@ def _tile_body(pop, lsb, msb_fn, w, acc_ref):
     sparse plane: pop == 0 tiles skip that work entirely. Both entry
     kernels normalize their operand layout this way, which is what keeps
     the packed and unpacked paths bit-exact.
+
+    ``msb_skip`` statically elides the sparse pass altogether: the traced
+    program contains only the dense LSB4 matmul, so the result is the
+    LSB4 plane's contribution alone — the 1-compute-round draft forward
+    of the self-speculative decode path (vs 1 + (1 - s) rounds for the
+    full hybrid pass, paper §3.3).
     """
     # ---- dense pass: LSB4 (always executes) ----
     acc_ref[...] += jax.lax.dot_general(
         lsb, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    if msb_skip:
+        return
 
     # ---- sparse pass: MSB4, skipped when this (m,k) tile has no PBM bits
     @pl.when(pop > 0)
@@ -121,14 +130,56 @@ def _kernel_packed(pop_ref, lsbp_ref, msbp_ref, w_ref, ascale_ref,
     _drain(k, n_k, acc_ref, out_ref, ascale_ref, wscale_ref)
 
 
+def _kernel_draft(lsb_ref, w_ref, ascale_ref, wscale_ref, out_ref,
+                  acc_ref, *, n_k: int):
+    """LSB4-only draft entry: the MSB plane and the PBM populations are
+    not operands at all, so the grid streams HALF the (unpacked)
+    activation bytes — the wire saving the cost model credits the draft
+    (``costmodel.linear_cost(lsb_only=True)``), not just elided MACs."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _tile_body(0, lsb_ref[...].astype(jnp.int8), None,
+               w_ref[...].astype(jnp.int8), acc_ref, msb_skip=True)
+    _drain(k, n_k, acc_ref, out_ref, ascale_ref, wscale_ref)
+
+
+def _kernel_packed_draft(lsbp_ref, w_ref, ascale_ref, wscale_ref, out_ref,
+                         acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lsb = unpack_nibbles(lsbp_ref[...], signed=False)
+    _tile_body(0, lsb, None, w_ref[...].astype(jnp.int8), acc_ref,
+               msb_skip=True)
+    _drain(k, n_k, acc_ref, out_ref, ascale_ref, wscale_ref)
+
+
 def _call(kernel, grid, act_specs, act_args, w, act_scale, w_scale,
-          tile_pop, m, n, bm, bn, bk, n_k, interpret):
+          tile_pop, m, n, bm, bn, bk, n_k, interpret, msb_skip=False,
+          draft_kernel=None):
+    if msb_skip:
+        # draft dispatch: ONLY the LSB plane is an operand — the MSB
+        # plane and PBM populations never enter the grid's DMA stream
+        kernel, in_specs = draft_kernel, [act_specs[0]]
+        args = (act_args[0], w, act_scale, w_scale)
+    else:
+        in_specs = [
+            pl.BlockSpec((1, 1), lambda i, j, kk: (i, kk)),        # tile_pop
+            *act_specs,                                            # lsb, msb
+        ]
+        args = (tile_pop, *act_args, w, act_scale, w_scale)
     return pl.pallas_call(
         functools.partial(kernel, n_k=n_k),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j, kk: (i, kk)),        # tile_pop
-            *act_specs,                                            # lsb, msb
+            *in_specs,
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),      # w
             pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),        # act_scale
             pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),        # w_scale
@@ -139,11 +190,11 @@ def _call(kernel, grid, act_specs, act_args, w, act_scale, w_scale,
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-    )(tile_pop, *act_args, w, act_scale, w_scale)
+    )(*args)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "msb_skip"))
 def sparqle_matmul(
     lsb4: jax.Array,       # (M, K) int8 in [0, 15]
     msb4: jax.Array,       # (M, K) int8 in [-8, 7]
@@ -156,6 +207,7 @@ def sparqle_matmul(
     bn: int = DEFAULT_BN,
     bk: int = DEFAULT_BK,
     interpret: bool = True,
+    msb_skip: bool = False,
 ) -> jax.Array:
     m, k = lsb4.shape
     k2, n = w.shape
@@ -171,11 +223,12 @@ def sparqle_matmul(
         pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),      # msb4
     ]
     return _call(_kernel, grid, act_specs, (lsb4, msb4), w, act_scale,
-                 w_scale, tile_pop, m, n, bm, bn, bk, n_k, interpret)
+                 w_scale, tile_pop, m, n, bm, bn, bk, n_k, interpret,
+                 msb_skip=msb_skip, draft_kernel=_kernel_draft)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "msb_skip"))
 def sparqle_matmul_packed(
     lsb4_packed: jax.Array,  # (M, K/2) int8 — two LSB nibbles per byte
     msb4_packed: jax.Array,  # (M, K/2) int8 — two MSB nibbles per byte
@@ -188,12 +241,18 @@ def sparqle_matmul_packed(
     bn: int = DEFAULT_BN,
     bk: int = DEFAULT_BK,
     interpret: bool = True,
+    msb_skip: bool = False,
 ) -> jax.Array:
     """Wire-format variant of :func:`sparqle_matmul`.
 
     Activation planes arrive packed two-per-byte (half the DMA bytes) and
     are unpacked in VMEM; the accumulation body is shared, so outputs are
     bit-exact vs the unpacked kernel on identical logical operands.
+
+    ``msb_skip`` dispatches the LSB4-only draft kernel: the ``msb4`` /
+    ``tile_pop`` arguments are accepted for signature parity but are NOT
+    operands of the pallas_call — the draft grid streams only the LSB
+    plane plus weights/scales.
     """
     m, kh = lsb4_packed.shape
     k = kh * 2
@@ -214,4 +273,5 @@ def sparqle_matmul_packed(
     ]
     return _call(_kernel_packed, grid, act_specs,
                  (lsb4_packed, msb4_packed), w, act_scale, w_scale,
-                 tile_pop, m, n, bm, bn, bk, n_k, interpret)
+                 tile_pop, m, n, bm, bn, bk, n_k, interpret,
+                 msb_skip=msb_skip, draft_kernel=_kernel_packed_draft)

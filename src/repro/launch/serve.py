@@ -66,17 +66,24 @@ def _legacy_serve(cfg, qparams, batch, plen, args) -> None:
 
 def _engine_serve(cfg, qparams, prompts, args) -> None:
     from repro.serving import (Engine, PoolConfig, SamplingParams,
-                               SchedulerConfig)
-    pages_per_seq = -(-(args.prompt_len + args.gen) // args.page_size)
+                               SchedulerConfig, SpecConfig,
+                               SpeculativeEngine)
+    gamma = getattr(args, "spec_gamma", 0)
+    pages_per_seq = -(-(args.prompt_len + args.gen + gamma)
+                      // args.page_size)
     n_pages = args.n_pages or (1 + pages_per_seq * args.batch)
-    eng = Engine(
-        cfg, qparams,
+    kw = dict(
         pool_config=PoolConfig(n_pages=n_pages, page_size=args.page_size),
         sched_config=SchedulerConfig(
             max_decode_batch=min(args.batch, args.decode_slots),
             token_budget=args.token_budget,
             prefill_chunk=args.prefill_chunk,
             max_pages_per_seq=pages_per_seq))
+    if gamma > 0:
+        eng = SpeculativeEngine(cfg, qparams, spec=SpecConfig(gamma=gamma),
+                                **kw)
+    else:
+        eng = Engine(cfg, qparams, **kw)
     t0 = time.time()
     handles = [eng.submit(np.asarray(p).tolist(),
                           SamplingParams(max_new_tokens=args.gen))
@@ -102,6 +109,10 @@ def _engine_serve(cfg, qparams, prompts, args) -> None:
         print(f"  measured wire format: {agg['wire_compression_pct']:.1f}% "
               f"activation bytes saved vs dense int8 "
               f"({agg['wire_bytes_total']/1e3:.1f} kB on the wire)")
+    if "spec_acceptance_rate" in agg:
+        print(f"  speculative: gamma={agg['spec_gamma']}, "
+              f"{agg['spec_acceptance_rate']*100:.1f}% drafts accepted, "
+              f"{agg['spec_tokens_per_step']:.2f} tokens/cycle")
     print(f"  pool: {agg['pool_utilization']*100:.0f}% pages in use at "
           f"drain, {agg['pool_evictions']} evictions")
 
@@ -130,6 +141,9 @@ def main(argv=None) -> None:
     ap.add_argument("--token-budget", type=int, default=128)
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--decode-slots", type=int, default=8)
+    ap.add_argument("--spec-gamma", type=int, default=0,
+                    help="self-speculative decoding: LSB4-only draft "
+                         "window per verify cycle (0 = off)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)

@@ -250,7 +250,8 @@ def make_engine_prefill_chunk(cfg: ModelConfig):
     return prefill_chunk
 
 
-def make_engine_decode(cfg: ModelConfig):
+def make_engine_decode(cfg: ModelConfig, *, msb_skip: bool = False,
+                       with_telemetry: bool = True):
     """One continuous-batching decode step over every decode slot.
 
     (params, pool, token (B,), pos (B,), block_tables (B, Pmax))
@@ -259,12 +260,37 @@ def make_engine_decode(cfg: ModelConfig):
     vs dense activation bytes (see ``models.model.decode_step_paged``).
     Raw logits come back (not argmax'd): sampling policy is per-request
     and lives host-side in the engine.
+
+    ``msb_skip=True`` builds the LSB4-only *draft* step of the
+    self-speculative engine: every sparqle projection is traced with the
+    sparse MSB pass statically elided (1 compute round instead of
+    1 + (1 - s); paper §3.3). ``with_telemetry=False`` additionally drops
+    the wire accounting from the traced program (telemetry comes back
+    empty) — the draft runs γ times per emitted batch, so it stays lean.
     """
     def engine_decode(params, pool, token, pos, block_tables):
         return M.decode_step_paged(cfg, params, pool, token, pos,
-                                   block_tables)
+                                   block_tables, msb_skip=msb_skip,
+                                   with_telemetry=with_telemetry)
 
     return engine_decode
+
+
+def make_engine_verify_window(cfg: ModelConfig):
+    """Full-precision batched verification of a γ-token draft window.
+
+    (params, pool, tokens (B, T), pos (B,), block_tables (B, Pmax))
+    -> (logits (B, T, V), new pool, telemetry) — one step scores every
+    window position of every decode slot at once and overwrites the
+    draft's approximate K/V with full-precision values (see
+    ``models.model.verify_window_paged``). Shape-static in T = γ + 1, so
+    the speculative engine compiles exactly one extra XLA program per γ.
+    """
+    def engine_verify(params, pool, tokens, pos, block_tables):
+        return M.verify_window_paged(cfg, params, pool, tokens, pos,
+                                     block_tables)
+
+    return engine_verify
 
 
 def pool_abstract_and_shardings(cfg: ModelConfig, n_pages: int,

@@ -29,14 +29,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.qlinear import linear
+from repro.core.qlinear import linear, msb_skip_scope
 from repro.core.quantize import quantize_weights
 from repro.distributed.sharding import constrain
 from repro.models import moe as moe_lib
 from repro.models import ssd as ssd_lib
 from repro.models.layers import (AttnSpec, NEG_INF, act_wire_telemetry,
                                  decode_attention, embed, flash_attention,
-                                 layer_norm, rms_norm, rope)
+                                 layer_norm, rms_norm, rope,
+                                 stack_sublayer_telemetry)
 from repro.models.stages import LayerDef, Stage, build_stages
 
 Params = Dict[str, Any]
@@ -682,7 +683,9 @@ def _apply_layer_decode_paged(cfg, ld: LayerDef, p: Params, x, pool,
 
 def decode_step_paged(cfg: ModelConfig, params: Params, pool: Cache,
                       token: jax.Array, pos: jax.Array,
-                      block_tables: jax.Array
+                      block_tables: jax.Array, *,
+                      msb_skip: bool = False,
+                      with_telemetry: bool = True
                       ) -> Tuple[jax.Array, Cache, Dict[str, jax.Array]]:
     """One continuous-batching decode step over the paged pool.
 
@@ -699,7 +702,21 @@ def decode_step_paged(cfg: ModelConfig, params: Params, pool: Cache,
         ``layers.act_wire_telemetry`` for what this does and does not
         include),
       * ``layer_dense_bytes`` (L, B) — dense int8 baseline bytes.
+
+    ``msb_skip`` traces every sparqle projection in LSB4-only draft mode
+    (the 1-compute-round proposer of self-speculative decoding; see
+    ``serving/spec_decode.py``) — the K/V written to the pool are then
+    the draft's approximations, which the verification step overwrites.
+    ``with_telemetry=False`` drops the wire accounting from the traced
+    program (the draft hot path) and returns an empty telemetry dict.
     """
+    with msb_skip_scope(msb_skip):
+        return _decode_step_paged_body(cfg, params, pool, token, pos,
+                                       block_tables, with_telemetry)
+
+
+def _decode_step_paged_body(cfg, params, pool, token, pos, block_tables,
+                            with_telemetry):
     dt = cfg.cdtype
     x = embed(token, params["embed"]["table"]).astype(dt)
     if cfg.name.startswith("gemma"):
@@ -713,12 +730,13 @@ def decode_step_paged(cfg: ModelConfig, params: Params, pool: Cache,
             tels = []
             new_c = {}
             for pi, ld in enumerate(stage.period):
-                tels.append(act_wire_telemetry(h))   # one per SUB-layer
+                if with_telemetry:
+                    tels.append(act_wire_telemetry(h))  # one per SUB-layer
                 h, c = _apply_layer_decode_paged(
                     cfg, ld, pslice[f"p{pi}"], h, cslice[f"p{pi}"],
                     block_tables, pos)
                 new_c[f"p{pi}"] = c
-            tel = {k: jnp.stack([t[k] for t in tels], 0) for k in tels[0]}
+            tel = stack_sublayer_telemetry(tels) if with_telemetry else {}
             return h, (new_c, tel)
 
         x, (nc, tel) = jax.lax.scan(body, x, (params["stages"][f"s{si}"],
@@ -727,11 +745,131 @@ def decode_step_paged(cfg: ModelConfig, params: Params, pool: Cache,
         # scan stacks to (repeat, period, B): flatten to per-layer (L_s, B)
         layer_tels.append({k: v.reshape(-1, *v.shape[2:])
                            for k, v in tel.items()})
-    telemetry = {"sparsity": _act_subprecision_sparsity(x)}
-    for key in ("sparsity", "wire_bytes", "dense_bytes"):
-        telemetry[f"layer_{key}"] = jnp.concatenate(
-            [t[key] for t in layer_tels], axis=0)
+    telemetry: Dict[str, jax.Array] = {}
+    if with_telemetry:
+        telemetry["sparsity"] = _act_subprecision_sparsity(x)
+        for key in ("sparsity", "wire_bytes", "dense_bytes"):
+            telemetry[f"layer_{key}"] = jnp.concatenate(
+                [t[key] for t in layer_tels], axis=0)
     logits = head_logits(cfg, params, x[:, None, :])[:, 0]
+    return logits, new_pool, telemetry
+
+
+def attn_verify_paged(cfg: ModelConfig, ld: LayerDef, p: Params,
+                      x: jax.Array, pool: Cache, block_tables: jax.Array,
+                      pos: jax.Array) -> Tuple[jax.Array, Cache]:
+    """Draft-window attention for speculative verification. x: (B, T, D).
+
+    Window token ``t`` of sequence ``b`` sits at absolute position
+    ``pos[b] + t``. All T tokens' K/V are quantized and scattered into
+    their page slots FIRST (overwriting whatever the LSB-only draft pass
+    left there), then the whole window attends through the block table in
+    one multi-token paged kernel call — each token causally masked to its
+    own position, so it sees the window's just-written full-precision K/V
+    but never its own future.
+    """
+    from repro.kernels.kv_attention import kv4_paged_verify_attention
+    b, t, d = x.shape
+    kvh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    theta = ld.rope_theta or cfg.rope_theta
+    h = _norm(cfg, p["ln"], x)
+    positions = pos[:, None] + jnp.arange(t)[None, :]       # (B, T)
+    q, k_new, v_new = _attn_qkv(cfg, p, h, positions, theta)
+    kq, ks = _kv_quant(cfg, k_new)
+    vq, vs = _kv_quant(cfg, v_new)
+    ps = pool["k_q"].shape[1]
+    n_steps = block_tables.shape[1]
+    step = jnp.clip(positions // ps, 0, n_steps - 1)
+    page = jnp.take_along_axis(block_tables, step, axis=1)  # (B, T)
+    off = positions % ps
+    pool = {
+        "k_q": pool["k_q"].at[page, off].set(kq),
+        "k_s": pool["k_s"].at[page, off].set(ks),
+        "v_q": pool["v_q"].at[page, off].set(vq),
+        "v_s": pool["v_s"].at[page, off].set(vs),
+    }
+    o = kv4_paged_verify_attention(
+        q.reshape(b, t, kvh, g, cfg.hd), pool["k_q"], pool["k_s"],
+        pool["v_q"], pool["v_s"], block_tables, pos)
+    o = o.reshape(b, t, cfg.n_heads * cfg.hd)
+    return linear(o, p["wo"], p.get("bo")), pool
+
+
+def verify_window_paged(cfg: ModelConfig, params: Params, pool: Cache,
+                        tokens: jax.Array, pos: jax.Array,
+                        block_tables: jax.Array
+                        ) -> Tuple[jax.Array, Cache, Dict[str, jax.Array]]:
+    """Score a whole draft window in ONE full-precision batched step.
+
+    tokens (B, T) int32 — window token 0 is the last accepted token,
+    tokens 1..T-1 the draft proposals; pos (B,) int32 — absolute position
+    of tokens[:, 0]; block_tables (B, Pmax) int32. Returns
+    (logits (B, T, V), new pool, telemetry):
+
+      * ``logits[:, t]`` is the full-precision next-token distribution
+        after window token t — exactly what a sequential decode at
+        ``pos + t`` would produce (the attention kernel is bit-exact
+        against that loop; see ``kernels/kv_attention.py``);
+      * the pool comes back with full-precision K/V written at every
+        window position, which is what makes greedy speculative decoding
+        byte-identical to the non-speculative engine: rejected tail
+        positions hold stale K/V but sit beyond the accepted position,
+        masked until overwritten;
+      * telemetry: ``sparsity`` (B,) mean final-hidden MSB4 sparsity over
+        the window; ``layer_sparsity`` (L, B) mean over window tokens;
+        ``layer_wire_bytes`` / ``layer_dense_bytes`` (L, B) measured
+        packed-wire vs dense int8 bytes summed over the window's
+        inter-layer hidden stream.
+    """
+    dt = cfg.cdtype
+    x = embed(tokens, params["embed"]["table"]).astype(dt)   # (B, T, D)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    x = constrain(x, ("batch", "seq", "embed"))
+    new_pool: Cache = {"stages": {}}
+    layer_tels = []
+    for si, stage in enumerate(build_stages(cfg)):
+        def body(h, inp, stage=stage):
+            pslice, cslice = inp
+            tels = []
+            new_c = {}
+            for pi, ld in enumerate(stage.period):
+                tels.append(act_wire_telemetry(h))   # one per SUB-layer
+                y, c = attn_verify_paged(
+                    cfg, ld, pslice[f"p{pi}"], h, cslice[f"p{pi}"],
+                    block_tables, pos)
+                h = h + y
+                if ld.ffn == "dense":
+                    h = h + dense_ffn(cfg, pslice[f"p{pi}"], h)
+                elif ld.ffn == "moe":
+                    # one routed-MoE call PER WINDOW POSITION: expert
+                    # capacity is a function of the flat token count
+                    # (t * top_k * cf // E), so batching all B*T window
+                    # tokens into one dispatch would drop different
+                    # assignments than the B-token sequential decode
+                    # steps this function must be bit-exact against
+                    h = h + jnp.concatenate(
+                        [moe_ffn(cfg, pslice[f"p{pi}"],
+                                 h[:, t:t + 1])[0]
+                         for t in range(h.shape[1])], axis=1)
+                new_c[f"p{pi}"] = c
+            return h, (new_c, stack_sublayer_telemetry(tels))
+
+        x, (nc, tel) = jax.lax.scan(body, x, (params["stages"][f"s{si}"],
+                                              pool["stages"][f"s{si}"]))
+        new_pool["stages"][f"s{si}"] = nc
+        # scan stacks to (repeat, period, B, T): flatten to (L_s, B, T)
+        layer_tels.append({k: v.reshape(-1, *v.shape[2:])
+                           for k, v in tel.items()})
+    cat = lambda key: jnp.concatenate(  # noqa: E731
+        [t[key] for t in layer_tels], axis=0)
+    telemetry = {
+        "sparsity": _act_subprecision_sparsity(x).mean(axis=-1),
+        "layer_sparsity": cat("sparsity").mean(axis=-1),
+        "layer_wire_bytes": cat("wire_bytes").sum(axis=-1),
+        "layer_dense_bytes": cat("dense_bytes").sum(axis=-1),
+    }
+    logits = head_logits(cfg, params, x)                     # (B, T, V)
     return logits, new_pool, telemetry
 
 
@@ -832,8 +970,7 @@ def prefill_chunk_paged(cfg: ModelConfig, params: Params, pool: Cache,
                 elif ld.ffn == "moe":
                     h = h + moe_ffn(cfg, pslice[f"p{pi}"], h)[0]
                 new_c[f"p{pi}"] = c
-            tel = {k: jnp.stack([t[k] for t in tels], 0) for k in tels[0]}
-            return h, (new_c, tel)
+            return h, (new_c, stack_sublayer_telemetry(tels))
 
         x, (nc, tel) = jax.lax.scan(body, x, (params["stages"][f"s{si}"],
                                               pool["stages"][f"s{si}"]))

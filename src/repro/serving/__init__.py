@@ -1,16 +1,22 @@
 """Continuous-batching serving over a paged packed-KV4 cache pool.
 
-  * kv_pool    — paged pool in the SPARQLe cache wire format (free-list
-                 allocation, null page, eviction hooks, MSB telemetry)
-  * scheduler  — FCFS continuous batching: token budget, chunked prefill,
-                 decode-slot backfill, recompute-style preemption
-  * engine     — the serving loop: submit() / stream() / run() over two
-                 shape-static jitted steps (see docs/serving.md)
+  * kv_pool     — paged pool in the SPARQLe cache wire format (free-list
+                  allocation, null page, eviction hooks, MSB telemetry,
+                  tail truncation for speculative rollback)
+  * scheduler   — FCFS continuous batching: token budget, chunked
+                  prefill, decode-slot backfill, recompute-style
+                  preemption, draft-window budget/lookahead accounting
+  * engine      — the serving loop: submit() / stream() / run() over two
+                  shape-static jitted steps (see docs/serving.md)
+  * spec_decode — self-speculative decoding: γ LSB4-only draft steps +
+                  one batched full-precision verify per cycle
 """
 from repro.serving.engine import Engine
 from repro.serving.kv_pool import PagedKVPool, PoolConfig
 from repro.serving.scheduler import (Request, SamplingParams, Scheduler,
                                      SchedulerConfig)
+from repro.serving.spec_decode import SpecConfig, SpeculativeEngine
 
 __all__ = ["Engine", "PagedKVPool", "PoolConfig", "Request",
-           "SamplingParams", "Scheduler", "SchedulerConfig"]
+           "SamplingParams", "Scheduler", "SchedulerConfig", "SpecConfig",
+           "SpeculativeEngine"]

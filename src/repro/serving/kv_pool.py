@@ -154,6 +154,32 @@ class PagedKVPool:
         self._free.extend(pages)
         return pages
 
+    def truncate(self, owner, n_tokens: int) -> List[int]:
+        """Release ``owner``'s tail pages past a token count.
+
+        Keeps the first ``ceil(n_tokens / page_size)`` pages (a partially
+        filled last page is kept whole) and frees the rest — the KV
+        rollback primitive for rejected speculative tokens and abandoned
+        generation tails, where a full :meth:`release` would throw away
+        live context. Page order, ownership of the kept prefix, and the
+        eviction counters are untouched; the eviction hook does not fire
+        (the owner asked for this — it is not a preemption). Truncating
+        to zero tokens removes the ownership entry entirely (no phantom
+        owners), and truncating past the held range is a no-op.
+        """
+        if n_tokens < 0:
+            raise ValueError(n_tokens)
+        keep = -(-n_tokens // self.page_size)           # ceil div
+        pages = self._owned.get(owner)
+        if pages is None or len(pages) <= keep:
+            return []
+        tail = pages[keep:]
+        del pages[keep:]
+        if not pages:
+            del self._owned[owner]
+        self._free.extend(tail)
+        return tail
+
     def evict(self, owner) -> List[int]:
         """Preemption hook: reclaim a live owner's pages (and tell them).
 

@@ -42,6 +42,12 @@ class SchedulerConfig:
     token_budget: int = 64           # tokens processed per engine step
     prefill_chunk: int = 32          # tokens per prefill call (jit shape)
     max_pages_per_seq: int = 16      # block-table width (jit shape)
+    # speculative decoding (serving/spec_decode.py). A γ-draft request
+    # burns 2γ+1 tokens of compute per scheduler step (γ draft + γ+1
+    # verify) and writes K/V up to γ positions past its context, so the
+    # budget and the page-growth/admission math both account for it:
+    decode_tokens_per_slot: int = 1  # compute tokens per decode slot/step
+    decode_lookahead: int = 0        # KV positions written past pos (= γ)
 
 
 @dataclasses.dataclass
@@ -63,6 +69,11 @@ class Request:
     wire_bytes_sum: float = 0.0      # measured packed-wire activation bytes
     dense_bytes_sum: float = 0.0     # dense int8 baseline for the same acts
     preemptions: int = 0
+    # speculative decoding (serving/spec_decode.py)
+    draft_proposed: int = 0          # LSB4-only drafts the verifier judged
+    draft_accepted: int = 0          # ... of those, accepted
+    spec_steps: int = 0              # draft+verify cycles run
+    spec_emitted: int = 0            # tokens emitted by those cycles
 
     def __post_init__(self):
         if not self.context:
@@ -99,6 +110,15 @@ class Request:
                 (1.0 - self.wire_bytes_sum / self.dense_bytes_sum) * 100.0
                 if self.dense_bytes_sum else float("nan")),
             "preemptions": self.preemptions,
+            # speculative decoding: fraction of LSB4-only draft tokens the
+            # full-precision verifier accepted, and emitted tokens per
+            # draft+verify cycle (>= 1: the correction token always lands)
+            "spec_acceptance_rate": (
+                self.draft_accepted / self.draft_proposed
+                if self.draft_proposed else float("nan")),
+            "spec_tokens_per_step": (
+                self.spec_emitted / self.spec_steps
+                if self.spec_steps else float("nan")),
         }
 
 
@@ -126,7 +146,11 @@ class Scheduler:
     def submit(self, prompt: List[int], sampling: SamplingParams,
                arrival: float) -> Request:
         cap = self.cfg.max_pages_per_seq * self.pool.page_size
-        need = len(prompt) + sampling.max_new_tokens
+        # lookahead: a draft window near the end of generation writes K/V
+        # up to decode_lookahead positions past the last sampled token,
+        # so those slots must exist in the block table too
+        need = (len(prompt) + sampling.max_new_tokens
+                + self.cfg.decode_lookahead)
         if need > cap:
             raise ValueError(
                 f"request needs {need} token slots but the block table "
@@ -195,9 +219,11 @@ class Scheduler:
         return -(-n_tokens // self.pool.page_size)      # ceil div
 
     def _ensure_decode_page(self, req: Request) -> bool:
-        """Grow the block table to cover this step's write position."""
+        """Grow the block table to cover this step's write positions
+        (through ``pos + decode_lookahead`` when a draft window rides
+        ahead of the accepted context)."""
         pos = len(req.context) - 1
-        need = self._pages_needed(pos + 1)
+        need = self._pages_needed(pos + 1 + self.cfg.decode_lookahead)
         have = len(self.pool.pages_of(req.rid))
         if need <= have:
             return True
@@ -232,8 +258,10 @@ class Scheduler:
                                          key=lambda r: (r.arrival, r.rid))
                        if r.status == RUNNING]
 
-        # 2. prefill — FCFS chunks under the remaining token budget
-        budget = self.cfg.token_budget - len(plan.decode)
+        # 2. prefill — FCFS chunks under the remaining token budget (a
+        # speculative decode slot burns 2γ+1 compute tokens, not 1)
+        budget = (self.cfg.token_budget
+                  - len(plan.decode) * self.cfg.decode_tokens_per_slot)
         for req in list(self.waiting):
             if budget <= 0:
                 break

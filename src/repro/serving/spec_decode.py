@@ -1,0 +1,271 @@
+"""Self-speculative decoding: LSB4-only drafting, batched full verification.
+
+SPARQLe's hybrid format contains a free draft model (paper §3.3): the
+dense LSB4 pass costs 1 compute round while the full LSB+MSB path costs
+1 + (1 - s) rounds, so a forward with the sparse MSB pass *statically
+elided* (``qlinear.msb_skip_scope``) is a cheap, always-resident
+approximation of the full model — same weights, same KV cache, no second
+network. This module turns that into self-speculative decoding:
+
+  1. **draft** — γ decode steps through the LSB4-only jitted step
+     (``steps.make_engine_decode(msb_skip=True, with_telemetry=False)``).
+     Each step writes the draft's *approximate* K/V into the request's
+     pages and proposes the next token (greedy at temperature 0, sampled
+     from the draft distribution otherwise).
+  2. **verify** — ONE full-precision batched step
+     (``steps.make_engine_verify_window``) scores the whole (γ+1)-token
+     window for every decode slot at once, overwriting the draft K/V
+     with full-precision values. The multi-token paged attention kernel
+     is bit-exact against a loop of single-token decodes, so at
+     temperature 0 the verified stream is byte-identical to the
+     non-speculative engine's greedy tokens.
+  3. **accept** — greedy exact-match acceptance at temperature 0
+     (emit full-precision argmax tokens while they match the draft, then
+     the correction/bonus token); standard rejection sampling otherwise
+     (accept draft d with prob min(1, p_full(d)/p_draft(d)); on reject,
+     sample the residual max(0, p_full - p_draft)). Every cycle emits
+     between 1 and γ+1 tokens.
+  4. **rollback** — ``PagedKVPool.truncate`` releases tail pages past
+     the accepted context; rejected K/V left mid-page sits beyond the
+     causal mask until overwritten.
+
+Budget/memory accounting: a speculative decode slot burns 2γ+1 compute
+tokens per scheduler step and writes K/V up to γ positions ahead, which
+``SchedulerConfig.decode_tokens_per_slot`` / ``decode_lookahead`` feed
+into the scheduler's token budget, page growth and admission checks.
+
+    eng = SpeculativeEngine(cfg, qparams, spec=SpecConfig(gamma=3))
+    h = eng.submit(prompt, SamplingParams(max_new_tokens=32))
+    eng.run()
+    h.stats()["spec_acceptance_rate"], h.stats()["spec_tokens_per_step"]
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving.engine import Engine
+from repro.serving.kv_pool import PoolConfig
+from repro.serving.scheduler import Request, SchedulerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    gamma: int = 2                   # draft tokens per verify cycle
+
+    def __post_init__(self):
+        if self.gamma < 1:
+            raise ValueError(f"gamma must be >= 1, got {self.gamma}")
+
+
+def _softmax(logits: np.ndarray, temperature: float) -> np.ndarray:
+    z = (logits.astype(np.float64) - logits.max()) / temperature
+    p = np.exp(z)
+    return p / p.sum()
+
+
+class SpeculativeEngine(Engine):
+    """Continuous-batching engine with self-speculative decode steps.
+
+    Drop-in for :class:`Engine`: same submit/stream/run API, same paged
+    pool, same chunked prefill. Only the decode path changes — γ LSB-only
+    draft steps followed by one batched full-precision verify instead of
+    one full decode per token. With ``mode='sparqle'`` params the draft
+    is genuinely sub-precision (acceptance < 1); with ``mode='dense'``
+    params the draft equals the target and speculation degenerates to
+    always-accept.
+    """
+
+    def __init__(self, cfg: ModelConfig, params,
+                 pool_config: Optional[PoolConfig] = None,
+                 sched_config: Optional[SchedulerConfig] = None,
+                 spec: SpecConfig = SpecConfig(),
+                 clock=time.monotonic):
+        from repro.launch import steps as S
+        self.spec = spec
+        g = spec.gamma
+        sched_config = dataclasses.replace(
+            sched_config or SchedulerConfig(),
+            decode_tokens_per_slot=2 * g + 1,   # γ draft + (γ+1) verify
+            decode_lookahead=g)
+        super().__init__(cfg, params, pool_config=pool_config,
+                         sched_config=sched_config, clock=clock)
+        self._draft_fn = jax.jit(
+            S.make_engine_decode(cfg, msb_skip=True, with_telemetry=False),
+            donate_argnums=(1,))
+        self._verify_fn = jax.jit(S.make_engine_verify_window(cfg),
+                                  donate_argnums=(1,))
+        # engine-level speculative counters (per-request ones live on
+        # Request; these survive request handles going out of scope)
+        self.draft_proposed_total = 0
+        self.draft_accepted_total = 0
+        self.spec_steps_total = 0
+        self.spec_emitted_total = 0
+
+    # -- decode path -------------------------------------------------------
+
+    def _run_decode(self, decode: List[Request]) -> List[Tuple[int, int]]:
+        B, g = self._n_slots, self.spec.gamma
+        token = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        tables = np.zeros((B, self._n_page_steps), np.int32)
+        for req in decode:
+            token[req.slot] = req.context[-1]
+            pos[req.slot] = len(req.context) - 1
+            tables[req.slot] = self._block_table_row(req)
+
+        # ---- draft: γ LSB4-only steps, token fed forward host-side ----
+        window = np.zeros((B, g + 1), np.int32)
+        window[:, 0] = token
+        jpos = jnp.asarray(pos)
+        jtables = jnp.asarray(tables)
+        cur = jnp.asarray(token)
+        dlogs = []
+        for i in range(g):
+            dlg, self.pool.state, _ = self._draft_fn(
+                self.params, self.pool.state, cur,
+                jpos + jnp.int32(i), jtables)
+            dlg = np.asarray(dlg)
+            dlogs.append(dlg)
+            nxt = np.zeros((B,), np.int32)
+            for req in decode:
+                nxt[req.slot] = self._sample(req, dlg[req.slot])
+            window[:, i + 1] = nxt
+            cur = jnp.asarray(nxt)
+        draft_logits = np.stack(dlogs, axis=1)          # (B, γ, V)
+
+        # ---- verify: one full-precision batched window step ----
+        vlg, self.pool.state, tel = self._verify_fn(
+            self.params, self.pool.state, jnp.asarray(window), jpos,
+            jtables)
+        vlg = np.asarray(vlg)                           # (B, γ+1, V)
+        sparsity = np.asarray(tel["sparsity"])
+        layer_wire = np.asarray(tel["layer_wire_bytes"], np.float64)
+        layer_dense = np.asarray(tel["layer_dense_bytes"], np.float64)
+
+        events: List[Tuple[int, int]] = []
+        for req in decode:
+            s = req.slot
+            req.sparsity_sum += float(sparsity[s]) * (g + 1)
+            req.sparsity_n += g + 1
+            self._account_wire(
+                req, float(layer_wire[:, s].sum()),
+                float(layer_dense[:, s].sum()),
+                layer_wire[:, s], layer_dense[:, s], g + 1)
+            events.extend(
+                self._accept_and_emit(req, window[s], vlg[s],
+                                      draft_logits[s]))
+            if not req.done:
+                # KV rollback: free tail pages past the accepted context
+                # (context[-1]'s own slot is kept — the next cycle writes
+                # there first); stale rejected K/V left mid-page sits
+                # beyond the causal mask until overwritten
+                self.pool.truncate(req.rid, len(req.context))
+        return events
+
+    # -- acceptance --------------------------------------------------------
+
+    def _accept_and_emit(self, req: Request, window: np.ndarray,
+                         vlogits: np.ndarray, dlogits: np.ndarray
+                         ) -> List[Tuple[int, int]]:
+        """Walk one request's verified window, emitting accepted tokens.
+
+        ``window`` (γ+1,) — window[0] is the request's last accepted
+        token, window[1:] the draft proposals. ``vlogits`` (γ+1, V) —
+        full-precision logits after each window token. ``dlogits``
+        (γ, V) — the draft logits each proposal was sampled from.
+        """
+        g = self.spec.gamma
+        t = req.sampling.temperature
+        events: List[Tuple[int, int]] = []
+        emitted = accepted = examined = 0
+
+        if t <= 0.0:
+            # greedy exact-match: emit full-precision argmaxes while the
+            # draft guessed them; the first mismatch emits the correction
+            # (and a fully-accepted window emits the free bonus token)
+            for i in range(g + 1):
+                if req.done:
+                    break
+                y = int(np.argmax(vlogits[i]))
+                ev = self._emit(req, y)
+                if ev:
+                    events.append(ev)
+                emitted += 1
+                if i == g:
+                    break
+                examined += 1
+                if int(window[i + 1]) != y:
+                    break
+                accepted += 1
+        else:
+            # rejection sampling: emitted tokens are distributed per the
+            # full-precision model regardless of draft quality
+            rng = self._rngs.setdefault(
+                req.rid,
+                np.random.default_rng(req.sampling.seed + req.rid))
+            rejected = False
+            for i in range(g):
+                if req.done:
+                    break
+                d = int(window[i + 1])
+                p_full = _softmax(vlogits[i], t)
+                p_draft = _softmax(dlogits[i], t)
+                examined += 1
+                if rng.random() < min(1.0, p_full[d] /
+                                      max(p_draft[d], 1e-300)):
+                    ev = self._emit(req, d)
+                    if ev:
+                        events.append(ev)
+                    emitted += 1
+                    accepted += 1
+                    continue
+                res = np.maximum(p_full - p_draft, 0.0)
+                tot = res.sum()
+                p = res / tot if tot > 0.0 else p_full
+                ev = self._emit(req, int(rng.choice(len(p), p=p)))
+                if ev:
+                    events.append(ev)
+                emitted += 1
+                rejected = True
+                break
+            if not rejected and not req.done:
+                p_full = _softmax(vlogits[g], t)
+                ev = self._emit(req, int(rng.choice(len(p_full),
+                                                    p=p_full)))
+                if ev:
+                    events.append(ev)
+                emitted += 1
+
+        # proposed counts only drafts the verifier actually EXAMINED: a
+        # request finishing mid-window leaves its tail drafts unjudged,
+        # and counting those would deflate the acceptance rate that
+        # costmodel.evaluate_speculative takes as alpha
+        req.draft_proposed += examined
+        req.draft_accepted += accepted
+        req.spec_steps += 1
+        req.spec_emitted += emitted
+        self.draft_proposed_total += examined
+        self.draft_accepted_total += accepted
+        self.spec_steps_total += 1
+        self.spec_emitted_total += emitted
+        return events
+
+    # -- telemetry ---------------------------------------------------------
+
+    def aggregate_stats(self) -> dict:
+        out = super().aggregate_stats()
+        out["spec_gamma"] = self.spec.gamma
+        if self.draft_proposed_total:
+            out["spec_acceptance_rate"] = (self.draft_accepted_total
+                                           / self.draft_proposed_total)
+        if self.spec_steps_total:
+            out["spec_tokens_per_step"] = (self.spec_emitted_total
+                                           / self.spec_steps_total)
+        return out
