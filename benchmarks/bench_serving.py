@@ -34,6 +34,7 @@ unstructured random init gives the draft.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -47,17 +48,19 @@ from repro.models.schema_builder import build_schema
 from repro.serving import (Engine, PoolConfig, SamplingParams,
                            SchedulerConfig, SpecConfig, SpeculativeEngine)
 
+# 8 q-heads / 4 kv-heads so the same bench model shards up to 4-way on
+# the model axis (--mesh): n_kv_heads, d_ff and vocab all divide
 BENCH_CFG = ModelConfig(
     name="bench-serve-2l", family="transformer", n_layers=2, d_model=64,
-    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=64,
+    n_heads=8, n_kv_heads=4, head_dim=8, d_ff=128, vocab=64,
     rope_theta=10_000.0, dtype="float32")
 
 STEP_DT = 0.05          # virtual seconds per engine step (admission clock)
 
 
 def draft_friendly_params(cfg: ModelConfig, seed: int = 0,
-                          n_spikes: int = 6, spike_lo: float = 0.12,
-                          spike_hi: float = 0.4):
+                          n_spikes: int = 12, spike_lo: float = 0.12,
+                          spike_hi: float = 0.9):
     """Float params whose activations are genuinely sub-precision sparse.
 
     Construction (per layer): the residual stream is kept NON-NEGATIVE
@@ -150,15 +153,17 @@ def _drive(eng, trace):
     return handles, time.monotonic() - t0
 
 
-def _make_engine(cfg, qparams, spec_gamma: int):
+def _make_engine(cfg, qparams, spec_gamma: int, mesh=None):
     pool = PoolConfig(n_pages=48, page_size=16)
     sched = SchedulerConfig(max_decode_batch=8, token_budget=96,
                             prefill_chunk=32, max_pages_per_seq=8)
     if spec_gamma > 0:
         return SpeculativeEngine(cfg, qparams, pool_config=pool,
                                  sched_config=sched,
-                                 spec=SpecConfig(gamma=spec_gamma))
-    return Engine(cfg, qparams, pool_config=pool, sched_config=sched)
+                                 spec=SpecConfig(gamma=spec_gamma),
+                                 mesh=mesh)
+    return Engine(cfg, qparams, pool_config=pool, sched_config=sched,
+                  mesh=mesh)
 
 
 def _report(emit, prefix, handles, wall, agg):
@@ -191,7 +196,7 @@ def _report(emit, prefix, handles, wall, agg):
 
 
 def run(emit, n_requests: int = 8, rate_hz: float = 2.0, seed: int = 0,
-        spec_gamma: int = 0) -> None:
+        spec_gamma: int = 0, mesh=None) -> None:
     cfg = BENCH_CFG
     params = draft_friendly_params(cfg, seed=seed)
     qparams = quantize_model_params(
@@ -204,9 +209,23 @@ def run(emit, n_requests: int = 8, rate_hz: float = 2.0, seed: int = 0,
     base_tpot = _report(emit, "serving", handles, wall,
                         eng.aggregate_stats())
 
+    jmesh = None
+    if mesh is not None:
+        from repro.launch.mesh import make_smoke_mesh
+        jmesh = make_smoke_mesh(data=mesh[0], model=mesh[1])
+        meng = _make_engine(cfg, qparams, 0, mesh=jmesh)
+        mesh_handles, mesh_wall = _drive(meng, trace)
+        _report(emit, "serving_mesh", mesh_handles, mesh_wall,
+                meng.aggregate_stats())
+        match = all(hb.out_tokens == hm.out_tokens
+                    for hb, hm in zip(handles, mesh_handles))
+        emit("serving_mesh/tokens_match_single_device", int(match),
+             f"sharded {mesh[0]}x{mesh[1]} greedy stream byte-identical "
+             f"to the single-device engine")
+
     if spec_gamma <= 0:
         return
-    spec_eng = _make_engine(cfg, qparams, spec_gamma)
+    spec_eng = _make_engine(cfg, qparams, spec_gamma, mesh=jmesh)
     spec_handles, spec_wall = _drive(spec_eng, trace)
     agg = spec_eng.aggregate_stats()
     spec_tpot = _report(emit, "serving_spec", spec_handles, spec_wall, agg)
@@ -235,10 +254,53 @@ def main() -> None:
     ap.add_argument("--spec-gamma", type=int, default=0,
                     help="also run the self-speculative engine with this "
                          "draft window on the same trace")
+    ap.add_argument("--mesh", default="",
+                    help="DATA,MODEL: also run the mesh-sharded engine "
+                         "on the same trace and assert its greedy stream "
+                         "matches the single-device engine (needs "
+                         "data*model jax devices; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--json", default="",
+                    help="also write {meta, metrics} to this path — the "
+                         "machine-readable result the CI regression gate "
+                         "compares against benchmarks/baselines/"
+                         "serving.json (benchmarks/check_regression.py)")
     args = ap.parse_args()
-    run(lambda n, v, d: print(f"{n},{v:.6g},{d}", flush=True),
-        n_requests=args.requests, rate_hz=args.rate, seed=args.seed,
-        spec_gamma=args.spec_gamma)
+    mesh = None
+    if args.mesh:
+        d, m = (int(v) for v in args.mesh.split(","))
+        mesh = (d, m)
+
+    records = {}
+
+    def emit(name, value, desc):
+        records[name] = float(value)
+        print(f"{name},{value:.6g},{desc}", flush=True)
+
+    run(emit, n_requests=args.requests, rate_hz=args.rate, seed=args.seed,
+        spec_gamma=args.spec_gamma, mesh=mesh)
+
+    # stream-match metrics are hard invariants, not observations: the CI
+    # smoke steps rely on a nonzero exit when equivalence breaks
+    broken = [k for k, v in records.items()
+              if k.endswith(("tokens_match_baseline",
+                             "tokens_match_single_device")) and v != 1.0]
+
+    if args.json:
+        payload = {
+            "meta": {"bench": "bench_serving", "config": BENCH_CFG.name,
+                     "requests": args.requests, "rate_hz": args.rate,
+                     "seed": args.seed, "spec_gamma": args.spec_gamma,
+                     "mesh": list(mesh) if mesh else None},
+            "metrics": records,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}", flush=True)
+
+    if broken:
+        raise SystemExit(f"token-stream equivalence FAILED: {broken}")
 
 
 if __name__ == "__main__":

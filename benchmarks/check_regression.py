@@ -1,0 +1,108 @@
+"""Bench regression gate: compare a bench JSON result to a committed baseline.
+
+    python -m benchmarks.check_regression result.json \
+        benchmarks/baselines/serving.json
+
+Both files are ``bench_serving.py --json`` payloads ({meta, metrics}).
+Metrics are gated by class:
+
+  * **deterministic counters** (token counts, engine steps, evictions,
+    stream-match flags, gamma) — must match the baseline EXACTLY. The
+    bench admits requests on a step-indexed clock, so for a fixed seed
+    these are machine-independent; any drift is a real behavior change.
+  * **measured ratios** (sparsity, wire compression, acceptance rate,
+    tokens/step, bytes/token) — relative tolerance (default 2%): they
+    derive from the deterministic token streams through f32 reductions,
+    so only last-ulp platform noise is expected.
+  * **timings** (ttft/tpot/throughput, CPU-interpret wall clock) — NOT
+    gated tightly (CI machines vary); only a catastrophic regression
+    (default 5x slower than baseline) fails.
+
+Extra metrics in the result are reported but not gated; metrics missing
+from the result fail (the bench silently lost coverage).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+EXACT_KEYS = ("requests", "gen_tokens", "engine_steps", "pool_evictions",
+              "tokens_match", "gamma")
+TIMING_KEYS = ("ttft", "tpot", "throughput")
+
+
+def classify(name: str) -> str:
+    short = name.rsplit("/", 1)[-1]
+    if any(k in short for k in TIMING_KEYS):
+        return "timing"
+    if any(k in short for k in EXACT_KEYS):
+        return "exact"
+    return "ratio"
+
+
+def check(result: dict, baseline: dict, rel_tol: float,
+          timing_factor: float) -> list:
+    failures = []
+    for name, base in sorted(baseline["metrics"].items()):
+        if name not in result["metrics"]:
+            failures.append(f"{name}: missing from result (baseline "
+                            f"{base:.6g})")
+            continue
+        got = result["metrics"][name]
+        kind = classify(name)
+        if kind == "exact":
+            ok = got == base
+            detail = f"expected exactly {base:.6g}"
+        elif kind == "timing":
+            # only catastrophic slowdowns gate; throughput inverts
+            if "throughput" in name:
+                ok = got >= base / timing_factor
+                detail = f">= baseline/{timing_factor:g} ({base:.6g})"
+            else:
+                ok = got <= base * timing_factor
+                detail = f"<= {timing_factor:g}x baseline ({base:.6g})"
+        else:
+            ok = math.isclose(got, base, rel_tol=rel_tol, abs_tol=1e-9)
+            detail = f"within {rel_tol:.0%} of {base:.6g}"
+        status = "ok" if ok else "FAIL"
+        print(f"[{status}] {name}: {got:.6g} ({kind}: {detail})")
+        if not ok:
+            failures.append(f"{name}: {got:.6g} vs baseline {base:.6g} "
+                            f"({kind})")
+    extra = sorted(set(result["metrics"]) - set(baseline["metrics"]))
+    for name in extra:
+        print(f"[new ] {name}: {result['metrics'][name]:.6g} (not in "
+              f"baseline, not gated)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("result", help="bench_serving --json output")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--rel-tol", type=float, default=0.02,
+                    help="relative tolerance for measured-ratio metrics")
+    ap.add_argument("--timing-factor", type=float, default=5.0,
+                    help="max slowdown factor before timings fail")
+    args = ap.parse_args(argv)
+
+    with open(args.result) as f:
+        result = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures = check(result, baseline, args.rel_tol, args.timing_factor)
+    if failures:
+        print(f"\nREGRESSION: {len(failures)} metric(s) failed the gate:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        return 1
+    print(f"\nall {len(baseline['metrics'])} baseline metrics within "
+          f"tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

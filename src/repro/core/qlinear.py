@@ -29,6 +29,7 @@ from repro.core.packing import encode_packed, unpack_planes
 from repro.core.quantize import (QuantizedTensor, quantize_activations,
                                  quantize_weights)
 from repro.core.sparqle import encode
+from repro.distributed.tp import tp_ctx
 
 
 # Trace-time draft-mode flag (self-speculative decoding): while True, every
@@ -174,40 +175,70 @@ def _single_pass_matmul(q: jax.Array, wq: jax.Array, batched: bool) -> jax.Array
     return jax.lax.dot_general(q, wq, dims, preferred_element_type=jnp.int32)
 
 
-def linear(x: jax.Array, w, b: Optional[jax.Array] = None) -> jax.Array:
+def linear(x: jax.Array, w, b: Optional[jax.Array] = None, *,
+           tp: Optional[str] = None) -> jax.Array:
     """Universal projection: x (..., K) @ w (K, N) [+ b].
 
     ``w`` may be a float array, a :class:`SparqleLinear`, or (batched expert
     form) x (E, C, K) @ w (E, K, N).
+
+    ``tp="row"`` marks this call site as row-parallel under tensor
+    parallelism (``distributed/tp.py``): when a TP trace is active the
+    input features and weight K dim are sharded over the model axis, the
+    per-token activation scale is taken over the GLOBAL row (exact pmax)
+    and the int32 accumulator is reduced with ONE psum before rescaling
+    (bias added after, on the replicated output). Inert otherwise —
+    single-device traces are unchanged.
     """
     if isinstance(w, SparqleLinear):
-        y = _quantized_apply(x, w)
+        y = _quantized_apply(x, w, tp=tp)
     else:
         y = jax.lax.dot_general(
             x, w.astype(x.dtype),
             (((x.ndim - 1,), (0,)), ((), ())))
+        ctx = tp_ctx()
+        if tp == "row" and ctx is not None and ctx.ways > 1:
+            y = jax.lax.psum(y, ctx.axis)
     if b is not None:
         y = y + b.astype(y.dtype)
     return y
 
 
-def expert_linear(x: jax.Array, w, ) -> jax.Array:
-    """Batched expert projection: x (E, C, K) @ w (E, K, N)."""
+def expert_linear(x: jax.Array, w, *, tp: Optional[str] = None) -> jax.Array:
+    """Batched expert projection: x (E, C, K) @ w (E, K, N).
+
+    ``tp="row"`` as in :func:`linear` (per-expert K dims sharded; one
+    int32 psum of the merged accumulator).
+    """
     if isinstance(w, SparqleLinear):
-        return _quantized_apply(x, w, batched=True)
-    return jnp.einsum("eck,ekn->ecn", x, w.astype(x.dtype))
+        return _quantized_apply(x, w, batched=True, tp=tp)
+    y = jnp.einsum("eck,ekn->ecn", x, w.astype(x.dtype))
+    ctx = tp_ctx()
+    if tp == "row" and ctx is not None and ctx.ways > 1:
+        y = jax.lax.psum(y, ctx.axis)
+    return y
 
 
 def _quantized_apply(x: jax.Array, sl: SparqleLinear,
-                     batched: bool = False) -> jax.Array:
-    """quantize -> clip -> decompose -> dual-pass -> rescale."""
+                     batched: bool = False,
+                     tp: Optional[str] = None) -> jax.Array:
+    """quantize -> clip -> decompose -> dual-pass -> [psum] -> rescale."""
+    ctx = tp_ctx()
+    row = tp == "row" and ctx is not None and ctx.ways > 1
     orig = x.shape
     k_in = orig[-1]
     if batched:
         x2 = x                                 # (E, C, K)
     else:
         x2 = x.reshape(-1, k_in)               # (M, K)
-    qa = quantize_activations(x2, bits=8, per_token=True)
+    if row:
+        # global per-token scale: pmax of local row maxima is exact, so
+        # each shard's int8 plane is a slice of the unsharded plane
+        amax = jax.lax.pmax(
+            jnp.max(jnp.abs(x2), axis=-1, keepdims=True), ctx.axis)
+        qa = quantize_activations(x2, bits=8, per_token=True, amax=amax)
+    else:
+        qa = quantize_activations(x2, bits=8, per_token=True)
     q = qa.q
     if sl.col_mask is not None and sl.l is not None:
         mask = sl.col_mask[:, None, :] if batched else sl.col_mask
@@ -218,6 +249,12 @@ def _quantized_apply(x: jax.Array, sl: SparqleLinear,
                                 msb_skip=_MSB_SKIP)
     else:
         acc = _single_pass_matmul(q, wq, batched)
+    if row:
+        # ONE reduction per linear: the dual-pass accumulator already
+        # merged LSB and shifted-MSB partials, and int32 addition is
+        # associative — the psum'd accumulator is bit-identical to the
+        # single-device one
+        acc = jax.lax.psum(acc, ctx.axis)
     w_scale = sl.w.scale  # (1, N) or (E, 1, N) per-output-channel
     out = acc.astype(jnp.float32) * qa.scale.astype(jnp.float32) \
         * w_scale.reshape((wq.shape[0], 1, -1) if batched else (1, -1))

@@ -69,6 +69,7 @@ def quantize_activations(
     bits: int = 8,
     per_token: bool = True,
     zero_point: bool = False,
+    amax: Optional[jax.Array] = None,
 ) -> QuantizedTensor:
     """Int8 activation quantization.
 
@@ -76,10 +77,17 @@ def quantize_activations(
     distribution so its near-zero mass lands in [0, 15] (MSB4==0 range),
     boosting sub-precision sparsity for non-centered activations (e.g. SiLU
     outputs). The shift is in real units; dequantization undoes it exactly.
+
+    ``amax`` overrides the reduction-axis abs-max (broadcastable to the
+    keepdims reduction shape). A tensor-parallel caller whose rows are
+    sharded over a mesh axis passes the GLOBAL row max (an exact ``pmax``
+    of local maxima), so every shard quantizes with the same scale and
+    the local int8 planes are exact slices of the unsharded ones.
     """
     lo, hi = _qrange(bits)
     axis = tuple(range(x.ndim - 1, x.ndim)) if per_token else tuple(range(x.ndim))
     if zero_point:
+        assert amax is None, "amax override not supported with zero_point"
         # Paper §3.1 zero-point adjustment: shift so the distribution's
         # near-minimum mass lands at q ~ 0, i.e. inside the MSB4==0 range
         # [0, 15]. For SiLU-like activations (bounded slightly below zero,
@@ -93,7 +101,8 @@ def quantize_activations(
         q = jnp.clip(jnp.round((x - zero) / scale), 0, hi).astype(jnp.int8)
         return QuantizedTensor(q=q, scale=scale.astype(jnp.float32),
                                zero=zero.astype(jnp.float32), bits=bits)
-    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    if amax is None:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
     scale = jnp.maximum(amax / hi, 1e-8)
     q = jnp.clip(jnp.round(x / scale), lo, hi).astype(jnp.int8)
     return QuantizedTensor(q=q, scale=scale.astype(jnp.float32),

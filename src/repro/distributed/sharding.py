@@ -43,6 +43,8 @@ DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
     "heads": ("model",),
     "heads_flat": ("model",),        # flattened H*hd projection dim
     "kv_heads": ("model",),
+    "pages": ("data",),              # paged KV pool slab: each data shard
+                                     # owns a slab of pages (serving TP)
     "qk_dim": (),
     "mlp": ("model",),
     "vocab": ("model",),
@@ -77,6 +79,24 @@ def mesh_context(mesh: Mesh, rules: Optional[Dict] = None):
     try:
         with mesh:
             yield mesh
+    finally:
+        _CTX.mesh, _CTX.rules = prev_mesh, prev_rules
+
+
+@contextlib.contextmanager
+def no_mesh():
+    """Suspend the ambient mesh (constrain becomes a no-op).
+
+    Used while tracing a ``shard_map`` body: inside manual-sharding
+    regions ``with_sharding_constraint`` against the outer mesh is
+    invalid, and the distributed MoE dispatch must take its local
+    (single-shard) path — the TP context (``distributed/tp.py``) carries
+    the collective placement instead.
+    """
+    prev_mesh, prev_rules = _CTX.mesh, _CTX.rules
+    _CTX.mesh, _CTX.rules = None, dict(DEFAULT_RULES)
+    try:
+        yield
     finally:
         _CTX.mesh, _CTX.rules = prev_mesh, prev_rules
 

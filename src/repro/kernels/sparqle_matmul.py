@@ -88,17 +88,26 @@ def _tile_body(pop, lsb, msb_fn, w, acc_ref, *, msb_skip: bool = False):
             << 4)
 
 
-def _drain(k, n_k, acc_ref, out_ref, ascale_ref, wscale_ref):
+def _drain(k, n_k, acc_ref, out_ref, ascale_ref, wscale_ref,
+           acc_out: bool = False):
     @pl.when(k == n_k - 1)
     def _():
-        out_ref[...] = (
-            acc_ref[...].astype(jnp.float32)
-            * ascale_ref[...].astype(jnp.float32)
-            * wscale_ref[...].astype(jnp.float32))
+        if acc_out:
+            # tensor-parallel drain: emit the raw merged int32 accumulator
+            # (LSB + shifted MSB already summed). The caller psums it ONCE
+            # across the model axis — int32 addition is associative, so
+            # the reduced accumulator is bit-identical to a single-device
+            # run — and applies the f32 rescale after the reduction.
+            out_ref[...] = acc_ref[...]
+        else:
+            out_ref[...] = (
+                acc_ref[...].astype(jnp.float32)
+                * ascale_ref[...].astype(jnp.float32)
+                * wscale_ref[...].astype(jnp.float32))
 
 
 def _kernel(pop_ref, lsb_ref, msb_ref, w_ref, ascale_ref, wscale_ref,
-            out_ref, acc_ref, *, n_k: int):
+            out_ref, acc_ref, *, n_k: int, acc_out: bool = False):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -108,11 +117,12 @@ def _kernel(pop_ref, lsb_ref, msb_ref, w_ref, ascale_ref, wscale_ref,
     _tile_body(pop_ref[0, 0], lsb_ref[...].astype(jnp.int8),
                lambda: msb_ref[...].astype(jnp.int8),
                w_ref[...].astype(jnp.int8), acc_ref)
-    _drain(k, n_k, acc_ref, out_ref, ascale_ref, wscale_ref)
+    _drain(k, n_k, acc_ref, out_ref, ascale_ref, wscale_ref, acc_out)
 
 
 def _kernel_packed(pop_ref, lsbp_ref, msbp_ref, w_ref, ascale_ref,
-                   wscale_ref, out_ref, acc_ref, *, n_k: int):
+                   wscale_ref, out_ref, acc_ref, *, n_k: int,
+                   acc_out: bool = False):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -127,11 +137,11 @@ def _kernel_packed(pop_ref, lsbp_ref, msbp_ref, w_ref, ascale_ref,
     _tile_body(pop_ref[0, 0], lsb,
                lambda: unpack_nibbles(msbp_ref[...], signed=True),
                w_ref[...].astype(jnp.int8), acc_ref)
-    _drain(k, n_k, acc_ref, out_ref, ascale_ref, wscale_ref)
+    _drain(k, n_k, acc_ref, out_ref, ascale_ref, wscale_ref, acc_out)
 
 
 def _kernel_draft(lsb_ref, w_ref, ascale_ref, wscale_ref, out_ref,
-                  acc_ref, *, n_k: int):
+                  acc_ref, *, n_k: int, acc_out: bool = False):
     """LSB4-only draft entry: the MSB plane and the PBM populations are
     not operands at all, so the grid streams HALF the (unpacked)
     activation bytes — the wire saving the cost model credits the draft
@@ -144,11 +154,11 @@ def _kernel_draft(lsb_ref, w_ref, ascale_ref, wscale_ref, out_ref,
 
     _tile_body(0, lsb_ref[...].astype(jnp.int8), None,
                w_ref[...].astype(jnp.int8), acc_ref, msb_skip=True)
-    _drain(k, n_k, acc_ref, out_ref, ascale_ref, wscale_ref)
+    _drain(k, n_k, acc_ref, out_ref, ascale_ref, wscale_ref, acc_out)
 
 
 def _kernel_packed_draft(lsbp_ref, w_ref, ascale_ref, wscale_ref, out_ref,
-                         acc_ref, *, n_k: int):
+                         acc_ref, *, n_k: int, acc_out: bool = False):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -158,12 +168,12 @@ def _kernel_packed_draft(lsbp_ref, w_ref, ascale_ref, wscale_ref, out_ref,
     lsb = unpack_nibbles(lsbp_ref[...], signed=False)
     _tile_body(0, lsb, None, w_ref[...].astype(jnp.int8), acc_ref,
                msb_skip=True)
-    _drain(k, n_k, acc_ref, out_ref, ascale_ref, wscale_ref)
+    _drain(k, n_k, acc_ref, out_ref, ascale_ref, wscale_ref, acc_out)
 
 
 def _call(kernel, grid, act_specs, act_args, w, act_scale, w_scale,
           tile_pop, m, n, bm, bn, bk, n_k, interpret, msb_skip=False,
-          draft_kernel=None):
+          draft_kernel=None, acc_out=False):
     if msb_skip:
         # draft dispatch: ONLY the LSB plane is an operand — the MSB
         # plane and PBM populations never enter the grid's DMA stream
@@ -176,7 +186,7 @@ def _call(kernel, grid, act_specs, act_args, w, act_scale, w_scale,
         ]
         args = (tile_pop, *act_args, w, act_scale, w_scale)
     return pl.pallas_call(
-        functools.partial(kernel, n_k=n_k),
+        functools.partial(kernel, n_k=n_k, acc_out=acc_out),
         grid=grid,
         in_specs=[
             *in_specs,
@@ -185,7 +195,8 @@ def _call(kernel, grid, act_specs, act_args, w, act_scale, w_scale,
             pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),        # w_scale
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct(
+            (m, n), jnp.int32 if acc_out else jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
         compiler_params=_CompilerParams(
@@ -194,7 +205,8 @@ def _call(kernel, grid, act_specs, act_args, w, act_scale, w_scale,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "msb_skip"))
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "interpret", "msb_skip", "acc_out"))
 def sparqle_matmul(
     lsb4: jax.Array,       # (M, K) int8 in [0, 15]
     msb4: jax.Array,       # (M, K) int8 in [-8, 7]
@@ -208,7 +220,12 @@ def sparqle_matmul(
     bk: int = DEFAULT_BK,
     interpret: bool = True,
     msb_skip: bool = False,
+    acc_out: bool = False,
 ) -> jax.Array:
+    """``acc_out`` emits the raw merged int32 accumulator instead of the
+    rescaled f32 output (scale operands are ignored) — the operand a
+    K-sharded tensor-parallel caller reduces with a single psum before
+    applying the drain-path rescale (``ops.sparqle_linear_sharded``)."""
     m, k = lsb4.shape
     k2, n = w.shape
     assert k == k2, (lsb4.shape, w.shape)
@@ -224,11 +241,13 @@ def sparqle_matmul(
     ]
     return _call(_kernel, grid, act_specs, (lsb4, msb4), w, act_scale,
                  w_scale, tile_pop, m, n, bm, bn, bk, n_k, interpret,
-                 msb_skip=msb_skip, draft_kernel=_kernel_draft)
+                 msb_skip=msb_skip, draft_kernel=_kernel_draft,
+                 acc_out=acc_out)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "msb_skip"))
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "interpret", "msb_skip", "acc_out"))
 def sparqle_matmul_packed(
     lsb4_packed: jax.Array,  # (M, K/2) int8 — two LSB nibbles per byte
     msb4_packed: jax.Array,  # (M, K/2) int8 — two MSB nibbles per byte
@@ -242,6 +261,7 @@ def sparqle_matmul_packed(
     bk: int = DEFAULT_BK,
     interpret: bool = True,
     msb_skip: bool = False,
+    acc_out: bool = False,
 ) -> jax.Array:
     """Wire-format variant of :func:`sparqle_matmul`.
 
@@ -252,7 +272,7 @@ def sparqle_matmul_packed(
     ``msb_skip`` dispatches the LSB4-only draft kernel: the ``msb4`` /
     ``tile_pop`` arguments are accepted for signature parity but are NOT
     operands of the pallas_call — the draft grid streams only the LSB
-    plane plus weights/scales.
+    plane plus weights/scales. ``acc_out`` as in :func:`sparqle_matmul`.
     """
     m, kh = lsb4_packed.shape
     k = kh * 2
@@ -274,4 +294,5 @@ def sparqle_matmul_packed(
     return _call(_kernel_packed, grid, act_specs,
                  (lsb4_packed, msb4_packed), w, act_scale, w_scale,
                  tile_pop, m, n, bm, bn, bk, n_k, interpret,
-                 msb_skip=msb_skip, draft_kernel=_kernel_packed_draft)
+                 msb_skip=msb_skip, draft_kernel=_kernel_packed_draft,
+                 acc_out=acc_out)

@@ -19,5 +19,16 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 
 
 def make_smoke_mesh(*, data: int = 1, model: int = 1) -> jax.sharding.Mesh:
-    """Tiny mesh over however many (CPU) devices exist — used by tests."""
+    """Tiny mesh over however many (CPU) devices exist — used by tests
+    and the ``--mesh`` serving path."""
+    need = data * model
+    have = len(jax.devices())
+    if need > have:
+        raise RuntimeError(
+            f"make_smoke_mesh(data={data}, model={model}) needs {need} "
+            f"devices but jax sees {have}. On CPU, emulate host devices "
+            f"with XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{need} (it must be set in the environment BEFORE jax "
+            f"initializes — the multi-device CI lane and "
+            f"tests/conftest.py's `mesh` fixture rely on this).")
     return jax.make_mesh((data, model), ("data", "model"))

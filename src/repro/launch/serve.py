@@ -64,26 +64,42 @@ def _legacy_serve(cfg, qparams, batch, plen, args) -> None:
           f"{t_decode*1e3:.1f} ms/token (CPU interpret timings)")
 
 
-def _engine_serve(cfg, qparams, prompts, args) -> None:
+def _engine_serve(cfg, qparams, prompts, args, serve_mesh=None) -> None:
     from repro.serving import (Engine, PoolConfig, SamplingParams,
                                SchedulerConfig, SpecConfig,
                                SpeculativeEngine)
     gamma = getattr(args, "spec_gamma", 0)
+    data_ways = 1
+    if serve_mesh is not None:
+        data_ways = serve_mesh.shape.get("data", 1)
     pages_per_seq = -(-(args.prompt_len + args.gen + gamma)
                       // args.page_size)
-    n_pages = args.n_pages or (1 + pages_per_seq * args.batch)
+    n_slots = min(args.batch, args.decode_slots)
+    n_slots += (-n_slots) % data_ways            # slots split over data
+    # a request's pages live in ONE data shard, so the default pool must
+    # give every shard room for its share of the batch (ceil), not an
+    # even split of the global worst case
+    batch_per_shard = -(-args.batch // data_ways)
+    n_pages = args.n_pages or (
+        data_ways * (1 + pages_per_seq * batch_per_shard))
+    n_pages += (-n_pages) % data_ways            # pages split over data
     kw = dict(
         pool_config=PoolConfig(n_pages=n_pages, page_size=args.page_size),
         sched_config=SchedulerConfig(
-            max_decode_batch=min(args.batch, args.decode_slots),
+            max_decode_batch=n_slots,
             token_budget=args.token_budget,
             prefill_chunk=args.prefill_chunk,
-            max_pages_per_seq=pages_per_seq))
+            max_pages_per_seq=pages_per_seq),
+        mesh=serve_mesh)
     if gamma > 0:
         eng = SpeculativeEngine(cfg, qparams, spec=SpecConfig(gamma=gamma),
                                 **kw)
     else:
         eng = Engine(cfg, qparams, **kw)
+    if serve_mesh is not None:
+        print(f"serving on mesh {dict(serve_mesh.shape)} "
+              f"({serve_mesh.size} devices): decode slots/pages sharded "
+              f"over 'data', weights+KV heads over 'model'")
     t0 = time.time()
     handles = [eng.submit(np.asarray(p).tolist(),
                           SamplingParams(max_new_tokens=args.gen))
@@ -144,11 +160,34 @@ def main(argv=None) -> None:
     ap.add_argument("--spec-gamma", type=int, default=0,
                     help="self-speculative decoding: LSB4-only draft "
                          "window per verify cycle (0 = off)")
+    ap.add_argument("--mesh", default="",
+                    help="DATA,MODEL device mesh for the engine (e.g. "
+                         "'2,4'): decode slots + pool pages shard over "
+                         "the data axis, weights/KV heads tensor-"
+                         "parallel over the model axis. Needs "
+                         "data*model jax devices (on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N). "
+                         "Token streams are bit-exact vs the default "
+                         "single-device engine (docs/sharding.md).")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if cfg.family == "encoder":
         raise SystemExit("encoder-only arch has no decode; see examples/")
+    serve_mesh = None
+    if args.mesh:
+        try:
+            d, m = (int(v) for v in args.mesh.split(","))
+        except ValueError:
+            raise SystemExit(f"--mesh expects 'DATA,MODEL', got "
+                             f"{args.mesh!r}")
+        if d * m > 1:
+            serve_mesh = make_smoke_mesh(data=d, model=m)
+        if args.legacy:
+            raise SystemExit("--mesh drives the paged engine; it has no "
+                             "effect on --legacy (drop one of the two)")
+    # ambient 1x1 mesh for the GSPMD tail paths (sparsity/cost-model
+    # report); the engine gets the serving mesh explicitly
     mesh = make_smoke_mesh()
 
     with mesh_context(mesh):
@@ -188,7 +227,8 @@ def main(argv=None) -> None:
             except NotImplementedError as e:
                 raise SystemExit(
                     f"{e}\n(this arch serves via --legacy only)")
-            _engine_serve(cfg, qparams, list(np.asarray(prompts)), args)
+            _engine_serve(cfg, qparams, list(np.asarray(prompts)), args,
+                          serve_mesh=serve_mesh)
 
         # achieved sub-precision sparsity of the hidden stream
         hidden = M.forward_hidden(cfg, qparams, batch)

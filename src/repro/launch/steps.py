@@ -233,7 +233,17 @@ def make_serve_decode(cfg: ModelConfig):
 # continuous-batching engine steps (serving/engine.py) — paged KV pool
 # ---------------------------------------------------------------------------
 
-def make_engine_prefill_chunk(cfg: ModelConfig):
+def _mesh_layout(cfg: ModelConfig, mesh: Mesh):
+    """(local cfg, model_ways, data axis name or None) for a step body."""
+    from repro.distributed.tp import mesh_axis_size, shard_model_config
+    mways = mesh_axis_size(mesh, "model")
+    daxis = "data" if mesh_axis_size(mesh, "data") > 1 else None
+    return shard_model_config(cfg, mways), mways, daxis
+
+
+def make_engine_prefill_chunk(cfg: ModelConfig, *,
+                              mesh: Optional[Mesh] = None,
+                              param_specs=None, pool_specs=None):
     """Chunked prefill of ONE sequence into the paged pool.
 
     (params, pool, tokens (1, C), start, valid, block_table (1, Pmax))
@@ -242,16 +252,56 @@ def make_engine_prefill_chunk(cfg: ModelConfig):
     measured packed-wire vs dense activation bytes (see
     ``models.model.prefill_chunk_paged``). Shape-static in C and Pmax,
     so the engine compiles this once.
-    """
-    def prefill_chunk(params, pool, tokens, start, valid, block_table):
-        return M.prefill_chunk_paged(cfg, params, pool, tokens, start,
-                                     valid, block_table)
 
-    return prefill_chunk
+    With a ``mesh``, the same body runs inside shard_map on a per-shard
+    config (weights model-partitioned, pool pages data-sharded; see
+    docs/sharding.md) and ``block_table`` widens to (D, Pmax) — one row
+    per data shard, the owning shard's row holding the sequence's
+    shard-local pages, every other row all-null. Non-owning shards
+    compute into their null page; the owner's logits/telemetry are
+    selected with an exact where-masked psum over the data axis.
+    """
+    if mesh is None:
+        def prefill_chunk(params, pool, tokens, start, valid, block_table):
+            return M.prefill_chunk_paged(cfg, params, pool, tokens, start,
+                                         valid, block_table)
+
+        return prefill_chunk
+
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import no_mesh
+    from repro.distributed.tp import shard_map_compat, tp_scope
+    lcfg, mways, daxis = _mesh_layout(cfg, mesh)
+
+    def body(params, pool, tokens, start, valid, table):
+        # prefill is replicated over data (the chunk's batch dim is 1):
+        # no batch_axis in the TP context, so MoE routes the local chunk
+        with no_mesh(), tp_scope("model", mways, batch_axis=None):
+            logits, pool, tel = M.prefill_chunk_paged(
+                lcfg, params, pool, tokens, start, valid, table)
+        if daxis is not None:
+            # exactly one data shard holds the sequence's pages (nonzero
+            # block-table row); a where-masked psum selects its values
+            # bit-exactly (a sum with a single nonzero term)
+            mine = jnp.any(table != 0)
+            sel = lambda t: jax.lax.psum(  # noqa: E731
+                jnp.where(mine, t, jnp.zeros_like(t)), daxis)
+            logits = sel(logits)
+            tel = {k: sel(v) for k, v in tel.items()}
+        return logits, pool, tel
+
+    tel_specs = {"sparsity": P(), "layer_sparsity": P(None),
+                 "layer_wire_bytes": P(None), "layer_dense_bytes": P(None)}
+    return shard_map_compat(
+        body, mesh,
+        in_specs=(param_specs, pool_specs, P(), P(), P(), P(daxis, None)),
+        out_specs=(P(), pool_specs, tel_specs))
 
 
 def make_engine_decode(cfg: ModelConfig, *, msb_skip: bool = False,
-                       with_telemetry: bool = True):
+                       with_telemetry: bool = True,
+                       mesh: Optional[Mesh] = None,
+                       param_specs=None, pool_specs=None):
     """One continuous-batching decode step over every decode slot.
 
     (params, pool, token (B,), pos (B,), block_tables (B, Pmax))
@@ -267,16 +317,45 @@ def make_engine_decode(cfg: ModelConfig, *, msb_skip: bool = False,
     1 + (1 - s); paper §3.3). ``with_telemetry=False`` additionally drops
     the wire accounting from the traced program (telemetry comes back
     empty) — the draft runs γ times per emitted batch, so it stays lean.
+
+    With a ``mesh``, the step runs inside shard_map: decode slots shard
+    over the "data" axis (block tables carry the slot's data shard's
+    local page ids), KV heads and weights over "model". Logits come back
+    with the vocab shards gathered, so the host-side sampling loop is
+    unchanged.
     """
-    def engine_decode(params, pool, token, pos, block_tables):
-        return M.decode_step_paged(cfg, params, pool, token, pos,
-                                   block_tables, msb_skip=msb_skip,
-                                   with_telemetry=with_telemetry)
+    if mesh is None:
+        def engine_decode(params, pool, token, pos, block_tables):
+            return M.decode_step_paged(cfg, params, pool, token, pos,
+                                       block_tables, msb_skip=msb_skip,
+                                       with_telemetry=with_telemetry)
 
-    return engine_decode
+        return engine_decode
+
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import no_mesh
+    from repro.distributed.tp import shard_map_compat, tp_scope
+    lcfg, mways, daxis = _mesh_layout(cfg, mesh)
+
+    def body(params, pool, token, pos, tables):
+        with no_mesh(), tp_scope("model", mways, batch_axis=daxis):
+            return M.decode_step_paged(lcfg, params, pool, token, pos,
+                                       tables, msb_skip=msb_skip,
+                                       with_telemetry=with_telemetry)
+
+    B, LB = P(daxis), P(None, daxis)
+    tel_specs = ({"sparsity": B, "layer_sparsity": LB,
+                  "layer_wire_bytes": LB, "layer_dense_bytes": LB}
+                 if with_telemetry else {})
+    return shard_map_compat(
+        body, mesh,
+        in_specs=(param_specs, pool_specs, B, B, P(daxis, None)),
+        out_specs=(P(daxis, None), pool_specs, tel_specs))
 
 
-def make_engine_verify_window(cfg: ModelConfig):
+def make_engine_verify_window(cfg: ModelConfig, *,
+                              mesh: Optional[Mesh] = None,
+                              param_specs=None, pool_specs=None):
     """Full-precision batched verification of a γ-token draft window.
 
     (params, pool, tokens (B, T), pos (B,), block_tables (B, Pmax))
@@ -285,12 +364,35 @@ def make_engine_verify_window(cfg: ModelConfig):
     draft's approximate K/V with full-precision values (see
     ``models.model.verify_window_paged``). Shape-static in T = γ + 1, so
     the speculative engine compiles exactly one extra XLA program per γ.
-    """
-    def engine_verify(params, pool, tokens, pos, block_tables):
-        return M.verify_window_paged(cfg, params, pool, tokens, pos,
-                                     block_tables)
 
-    return engine_verify
+    With a ``mesh``, sharded exactly like :func:`make_engine_decode`
+    (the window axis T stays per-shard-complete).
+    """
+    if mesh is None:
+        def engine_verify(params, pool, tokens, pos, block_tables):
+            return M.verify_window_paged(cfg, params, pool, tokens, pos,
+                                         block_tables)
+
+        return engine_verify
+
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import no_mesh
+    from repro.distributed.tp import shard_map_compat, tp_scope
+    lcfg, mways, daxis = _mesh_layout(cfg, mesh)
+
+    def body(params, pool, tokens, pos, tables):
+        with no_mesh(), tp_scope("model", mways, batch_axis=daxis):
+            return M.verify_window_paged(lcfg, params, pool, tokens, pos,
+                                         tables)
+
+    B, LB = P(daxis), P(None, daxis)
+    tel_specs = {"sparsity": B, "layer_sparsity": LB,
+                 "layer_wire_bytes": LB, "layer_dense_bytes": LB}
+    return shard_map_compat(
+        body, mesh,
+        in_specs=(param_specs, pool_specs, P(daxis, None), B,
+                  P(daxis, None)),
+        out_specs=(P(daxis, None, None), pool_specs, tel_specs))
 
 
 def pool_abstract_and_shardings(cfg: ModelConfig, n_pages: int,

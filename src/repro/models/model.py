@@ -32,6 +32,7 @@ from repro.configs.base import ModelConfig
 from repro.core.qlinear import linear, msb_skip_scope
 from repro.core.quantize import quantize_weights
 from repro.distributed.sharding import constrain
+from repro.distributed.tp import tp_ctx
 from repro.models import moe as moe_lib
 from repro.models import ssd as ssd_lib
 from repro.models.layers import (AttnSpec, NEG_INF, act_wire_telemetry,
@@ -119,7 +120,7 @@ def attn_full(cfg: ModelConfig, ld: LayerDef, p: Params, x: jax.Array,
                     prefix_len=prefix_len)
     o = flash_attention(q, k, v, spec)
     o = o.reshape(b, s, cfg.n_heads * cfg.hd)
-    out = linear(o, p["wo"], p.get("bo"))
+    out = linear(o, p["wo"], p.get("bo"), tp="row")
 
     cache = None
     if make_cache is not None:
@@ -159,7 +160,7 @@ def attn_decode(cfg: ModelConfig, ld: LayerDef, p: Params, x: jax.Array,
     spec = AttnSpec(causal=cfg.causal, window=ld.window)
     o = decode_attention(q, k, v, pos, spec)
     o = o.reshape(b, cfg.n_heads * cfg.hd)
-    return linear(o, p["wo"], p.get("bo")), cache
+    return linear(o, p["wo"], p.get("bo"), tp="row"), cache
 
 
 # ---------------------------------------------------------------------------
@@ -408,18 +409,35 @@ def dense_ffn(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
         g = act(linear(h, p["w_gate"]))
         u = linear(h, p["w_up"])
         hh = constrain(g * u, ("batch", "seq", "mlp"))
-        return linear(hh, p["w_down"])
+        return linear(hh, p["w_down"], tp="row")
     hh = jax.nn.gelu(linear(h, p["w_fc"], p.get("b_fc")), approximate=True)
     hh = constrain(hh, ("batch", "seq", "mlp"))
-    return linear(hh, p["w_proj"], p.get("b_proj"))
+    return linear(hh, p["w_proj"], p.get("b_proj"), tp="row")
 
 
 def moe_ffn(cfg: ModelConfig, p: Params,
             x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Returns (output, load-balance aux loss)."""
+    """Returns (output, load-balance aux loss).
+
+    Under a tensor-parallel trace whose BATCH is sharded over a data axis
+    (the decode/verify serving steps), the flat token batch is
+    all-gathered before routing and the local rows sliced back out after
+    the combine: expert capacity and within-expert ranking are functions
+    of the whole batch, so routing on local shards alone would keep/drop
+    different assignments than the single-device step. The gathered rows
+    arrive in global slot order (shards own contiguous slot ranges), so
+    dispatch, capacity and combine are bit-identical to the unsharded
+    batch; the expert FFNs themselves are sharded on their hidden dim
+    (one int32 psum per down-projection — see ``distributed/tp.py``).
+    """
     h = _norm(cfg, p["ln2"], x)
     shp = h.shape
     flat = h.reshape(-1, shp[-1])
+    ctx = tp_ctx()
+    gathered = ctx is not None and ctx.batch_axis is not None
+    if gathered:
+        t_local = flat.shape[0]
+        flat = jax.lax.all_gather(flat, ctx.batch_axis, axis=0, tiled=True)
     mp = p["moe"]
     y = moe_lib.moe_ffn_dist(
         flat, mp["w_router"], mp["w_gate"], mp["w_up"], mp["w_down"],
@@ -430,6 +448,9 @@ def moe_ffn(cfg: ModelConfig, p: Params,
             flat, mp["w_shared_gate"], mp["w_shared_up"],
             mp["w_shared_down"])
     aux = moe_lib.load_balance_loss(flat, mp["w_router"], cfg.top_k)
+    if gathered:
+        start = jax.lax.axis_index(ctx.batch_axis) * t_local
+        y = jax.lax.dynamic_slice_in_dim(y, start, t_local, axis=0)
     return y.reshape(shp), aux
 
 
@@ -535,8 +556,18 @@ def embed_inputs(cfg: ModelConfig, params: Params,
 def head_logits(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
     x = _norm(cfg, params["final_norm"], x)
     if cfg.tie_embeddings:
+        # tied head: the embedding table stays replicated under TP (token
+        # lookup needs the full vocab), so logits are already complete
         return linear(x, params["embed"]["table"].T)
-    return linear(x, params["lm_head"])
+    logits = linear(x, params["lm_head"])
+    ctx = tp_ctx()
+    if ctx is not None and logits.shape[-1] != cfg.vocab:
+        # column-parallel head: gather the vocab shards back into the
+        # full distribution (exact concatenation, shard order = axis
+        # order) — sampling policy lives host-side in the engine
+        logits = jax.lax.all_gather(logits, ctx.axis, axis=logits.ndim - 1,
+                                    tiled=True)
+    return logits
 
 
 # ---------------------------------------------------------------------------
@@ -672,7 +703,7 @@ def attn_decode_paged(cfg: ModelConfig, ld: LayerDef, p: Params,
         q.reshape(b, kvh, g, cfg.hd), pool["k_q"], pool["k_s"],
         pool["v_q"], pool["v_s"], block_tables, pos)
     o = o.reshape(b, cfg.n_heads * cfg.hd)
-    return linear(o, p["wo"], p.get("bo")), pool
+    return linear(o, p["wo"], p.get("bo"), tp="row"), pool
 
 
 def _apply_layer_decode_paged(cfg, ld: LayerDef, p: Params, x, pool,
@@ -792,7 +823,7 @@ def attn_verify_paged(cfg: ModelConfig, ld: LayerDef, p: Params,
         q.reshape(b, t, kvh, g, cfg.hd), pool["k_q"], pool["k_s"],
         pool["v_q"], pool["v_s"], block_tables, pos)
     o = o.reshape(b, t, cfg.n_heads * cfg.hd)
-    return linear(o, p["wo"], p.get("bo")), pool
+    return linear(o, p["wo"], p.get("bo"), tp="row"), pool
 
 
 def verify_window_paged(cfg: ModelConfig, params: Params, pool: Cache,
@@ -928,7 +959,7 @@ def _attn_prefill_chunk_paged(cfg: ModelConfig, ld: LayerDef, p: Params,
     pr = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgij,bjkd->bikgd", pr, v_cat)
     o = o.reshape(1, c, cfg.n_heads * hd).astype(x.dtype)
-    return linear(o, p["wo"], p.get("bo")), pool
+    return linear(o, p["wo"], p.get("bo"), tp="row"), pool
 
 
 def prefill_chunk_paged(cfg: ModelConfig, params: Params, pool: Cache,

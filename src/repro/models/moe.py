@@ -92,7 +92,10 @@ def moe_ffn(
     h = jax.nn.silu(expert_linear(expert_in, w_gate))
     h = h * expert_linear(expert_in, w_up)
     h = constrain(h, ("experts", "capacity", "mlp"))
-    expert_out = expert_linear(h, w_down)
+    # under serving TP the experts are sharded on their hidden dim (NOT
+    # the expert axis): dispatch/routing replicate, and the down-proj's
+    # single int32 psum keeps the combine bit-exact vs a single device
+    expert_out = expert_linear(h, w_down, tp="row")
     expert_out = constrain(expert_out, ("experts", "capacity", None))
 
     # combine via the INVERSE permutation (pure gathers): a scatter-add here
@@ -246,4 +249,4 @@ def shared_expert_ffn(x, w_gate, w_up, w_down):
     shared-expert weights folded into one wide FFN."""
     h = jax.nn.silu(linear(x, w_gate)) * linear(x, w_up)
     h = constrain(h, ("batch", "seq", "mlp"))
-    return linear(h, w_down)
+    return linear(h, w_down, tp="row")

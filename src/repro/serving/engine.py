@@ -38,13 +38,48 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params,
                  pool_config: Optional[PoolConfig] = None,
                  sched_config: Optional[SchedulerConfig] = None,
-                 clock=time.monotonic):
+                 clock=time.monotonic, mesh=None):
+        """``mesh`` (a ("data", "model") Mesh, e.g. ``make_smoke_mesh``)
+        makes the engine mesh-native: the jitted steps run inside
+        shard_map with weights tensor-parallel on "model", the paged pool
+        sharded on kv_heads over "model" and pages over "data", and
+        decode slots partitioned over "data". The public API and the
+        greedy token streams are unchanged — sharded steps are bit-exact
+        vs the single-device ones (docs/sharding.md). A 1-device mesh
+        (or None) keeps the original single-device path.
+        """
         from repro.launch import steps as S
         check_paged_support(cfg)
         self.cfg = cfg
+        self.mesh = mesh if (mesh is not None and mesh.size > 1) else None
+        pool_config = pool_config or PoolConfig()
+        sched_config = sched_config or SchedulerConfig()
+        if self.mesh is not None:
+            from repro.distributed import tp
+            mways = tp.mesh_axis_size(self.mesh, "model")
+            dways = tp.mesh_axis_size(self.mesh, "data")
+            tp.validate_tp_config(cfg, mways)
+            if sched_config.max_decode_batch % dways:
+                raise ValueError(
+                    f"max_decode_batch={sched_config.max_decode_batch} "
+                    f"must divide over the data axis ({dways}): each data "
+                    f"shard owns a contiguous slice of decode slots")
+            self._data_ways = dways
+            self._param_specs = tp.param_pspecs(params, axis="model")
+            self._pool_specs = tp.pool_pspecs(cfg, pool_config, self.mesh)
+            params = tp.device_put_tree(params, self._param_specs,
+                                        self.mesh)
+        else:
+            self._data_ways = 1
+            self._param_specs = self._pool_specs = None
         self.params = params
-        self.pool = PagedKVPool(cfg, pool_config or PoolConfig())
-        self.sched = Scheduler(self.pool, sched_config or SchedulerConfig())
+        self.pool = PagedKVPool(cfg, pool_config,
+                                n_shards=self._data_ways)
+        if self.mesh is not None:
+            from repro.distributed import tp
+            self.pool.state = tp.device_put_tree(
+                self.pool.state, self._pool_specs, self.mesh)
+        self.sched = Scheduler(self.pool, sched_config)
         self._clock = clock
         scfg = self.sched.cfg
         self._chunk = scfg.prefill_chunk
@@ -53,10 +88,16 @@ class Engine:
         # donate the pool state: the old pages buffer is dead the moment a
         # step returns, and without aliasing every token would copy the
         # whole pool (exactly the HBM traffic the paged design removes)
-        self._prefill_fn = jax.jit(S.make_engine_prefill_chunk(cfg),
-                                   donate_argnums=(1,))
-        self._decode_fn = jax.jit(S.make_engine_decode(cfg),
-                                  donate_argnums=(1,))
+        self._prefill_fn = jax.jit(
+            S.make_engine_prefill_chunk(cfg, mesh=self.mesh,
+                                        param_specs=self._param_specs,
+                                        pool_specs=self._pool_specs),
+            donate_argnums=(1,))
+        self._decode_fn = jax.jit(
+            S.make_engine_decode(cfg, mesh=self.mesh,
+                                 param_specs=self._param_specs,
+                                 pool_specs=self._pool_specs),
+            donate_argnums=(1,))
         self._rngs: Dict[int, np.random.Generator] = {}
         self.steps = 0
         # per-layer measured wire-format telemetry (lazily sized (L,) on
@@ -154,6 +195,14 @@ class Engine:
         row[:len(pages)] = pages
         return row
 
+    def _prefill_tables(self, req: Request) -> np.ndarray:
+        """(D, Pmax) block table for the prefill step: one row per data
+        shard, the owning shard's row holding the request's (shard-local)
+        pages, every other row all-null (D = 1 without a mesh)."""
+        tables = np.zeros((self._data_ways, self._n_page_steps), np.int32)
+        tables[self.pool.shard_of(req.rid)] = self._block_table_row(req)
+        return tables
+
     def _sample(self, req: Request, logits: np.ndarray) -> int:
         t = req.sampling.temperature
         if t <= 0.0:
@@ -186,7 +235,7 @@ class Engine:
         logits, self.pool.state, tel = self._prefill_fn(
             self.params, self.pool.state, jnp.asarray(toks),
             jnp.asarray(start, jnp.int32), jnp.asarray(n, jnp.int32),
-            jnp.asarray(self._block_table_row(req))[None])
+            jnp.asarray(self._prefill_tables(req)))
         req.sparsity_sum += float(tel["sparsity"]) * n
         req.sparsity_n += n
         layer_wire = np.asarray(tel["layer_wire_bytes"], np.float64)

@@ -60,16 +60,19 @@ def pool_schema(cfg: ModelConfig, pool: PoolConfig) -> Schema:
     np_, ps = pool.n_pages, pool.page_size
 
     def layer_pool() -> Schema:
+        # logical axes: the page slab shards over "data" (each data shard
+        # owns a slab — request-level parallelism), KV heads over "model"
+        # (tensor parallelism); see distributed/sharding.DEFAULT_RULES
         return {
             "k_q": ParamSpec((np_, ps, kvh, hd // 2),
-                             (None, None, "kv_heads", None),
+                             ("pages", None, "kv_heads", None),
                              jnp.int8, init="zeros"),
-            "k_s": ParamSpec((np_, ps, kvh), (None, None, "kv_heads"),
+            "k_s": ParamSpec((np_, ps, kvh), ("pages", None, "kv_heads"),
                              jnp.float32, init="ones"),
             "v_q": ParamSpec((np_, ps, kvh, hd // 2),
-                             (None, None, "kv_heads", None),
+                             ("pages", None, "kv_heads", None),
                              jnp.int8, init="zeros"),
-            "v_s": ParamSpec((np_, ps, kvh), (None, None, "kv_heads"),
+            "v_s": ParamSpec((np_, ps, kvh), ("pages", None, "kv_heads"),
                              jnp.float32, init="ones"),
         }
 
@@ -101,16 +104,42 @@ class PagedKVPool:
 
     ``on_evict(owner, pages)`` fires when :meth:`evict` reclaims a live
     owner's pages (the scheduler's preemption hook).
+
+    **Mesh sharding.** The device state shards along two logical axes
+    (``pool_schema``): ``kv_heads`` over the mesh's model axis — every
+    model shard holds the same page structure, so ONE host-side free
+    list drives all model shards in lock-step and a single block table
+    indexes every shard identically (truncate/eviction are pure host
+    bookkeeping, no collective) — and ``pages`` over the data axis:
+    ``n_shards`` > 1 splits the slab into per-data-shard sub-pools, each
+    with its OWN free list, its own reserved null page (local id 0) and
+    shard-LOCAL page ids. Block tables then carry local ids, which is
+    what lets the paged kernel index its local slab directly inside
+    ``shard_map``. An owner's pages all live in one shard (requests pin
+    to the data shard of their decode slot). ``n_shards=1`` reproduces
+    the original single-pool behavior exactly.
     """
 
-    def __init__(self, cfg: ModelConfig, pool_cfg: PoolConfig):
-        if pool_cfg.n_pages < 2:
-            raise ValueError("need at least one page beyond the null page")
+    def __init__(self, cfg: ModelConfig, pool_cfg: PoolConfig,
+                 n_shards: int = 1):
+        if n_shards < 1:
+            raise ValueError(n_shards)
+        if pool_cfg.n_pages % n_shards:
+            raise ValueError(
+                f"n_pages={pool_cfg.n_pages} must divide over "
+                f"{n_shards} data shards")
+        if pool_cfg.n_pages // n_shards < 2:
+            raise ValueError("need at least one page beyond the null page "
+                             "in every shard")
         self.cfg = cfg
         self.pool_cfg = pool_cfg
+        self.n_shards = n_shards
+        self.pages_per_shard = pool_cfg.n_pages // n_shards
         self.state = init_pool_state(cfg, pool_cfg)
-        self._free = collections.deque(range(1, pool_cfg.n_pages))
+        self._free = [collections.deque(range(1, self.pages_per_shard))
+                      for _ in range(n_shards)]
         self._owned: Dict[object, List[int]] = {}
+        self._owner_shard: Dict[object, int] = {}
         self.evictions = 0
         self.on_evict: Optional[Callable[[object, List[int]], None]] = None
 
@@ -122,36 +151,58 @@ class PagedKVPool:
 
     @property
     def n_usable_pages(self) -> int:
-        return self.pool_cfg.n_pages - 1          # minus the null page
+        # minus one reserved null page per shard
+        return self.pool_cfg.n_pages - self.n_shards
+
+    @property
+    def usable_pages_per_shard(self) -> int:
+        return self.pages_per_shard - 1
 
     @property
     def num_free(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free)
+
+    def free_in_shard(self, shard: int) -> int:
+        return len(self._free[shard])
 
     def pages_of(self, owner) -> List[int]:
         return list(self._owned.get(owner, ()))
 
+    def shard_of(self, owner) -> int:
+        """Data shard holding ``owner``'s pages (0 when it holds none)."""
+        return self._owner_shard.get(owner, 0)
+
     # -- allocation --------------------------------------------------------
 
-    def allocate(self, n: int, owner) -> Optional[List[int]]:
-        """Pop ``n`` pages for ``owner``; None (no partial grab) if short."""
+    def allocate(self, n: int, owner, shard: int = 0) -> Optional[List[int]]:
+        """Pop ``n`` pages for ``owner`` from ``shard``'s free list;
+        None (no partial grab) if that shard is short. Returned ids are
+        shard-local. An owner's pages must all come from one shard."""
         if n < 0:
             raise ValueError(n)
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} out of range")
+        if owner in self._owner_shard and self._owner_shard[owner] != shard:
+            raise ValueError(
+                f"owner {owner!r} already holds pages in shard "
+                f"{self._owner_shard[owner]}, cannot allocate in {shard}")
         if n == 0:
             # no phantom ownership entries: a zero-page grab must not make
             # the owner show up in the ownership map (release/evict treat
             # map presence as "holds pages")
             return []
-        if n > len(self._free):
+        if n > len(self._free[shard]):
             return None
-        pages = [self._free.popleft() for _ in range(n)]
+        pages = [self._free[shard].popleft() for _ in range(n)]
         self._owned.setdefault(owner, []).extend(pages)
+        self._owner_shard[owner] = shard
         return pages
 
     def release(self, owner) -> List[int]:
-        """Return all of ``owner``'s pages to the free list."""
+        """Return all of ``owner``'s pages to its shard's free list."""
         pages = self._owned.pop(owner, [])
-        self._free.extend(pages)
+        shard = self._owner_shard.pop(owner, 0)
+        self._free[shard].extend(pages)
         return pages
 
     def truncate(self, owner, n_tokens: int) -> List[int]:
@@ -173,11 +224,13 @@ class PagedKVPool:
         pages = self._owned.get(owner)
         if pages is None or len(pages) <= keep:
             return []
+        shard = self._owner_shard.get(owner, 0)
         tail = pages[keep:]
         del pages[keep:]
         if not pages:
             del self._owned[owner]
-        self._free.extend(tail)
+            self._owner_shard.pop(owner, None)
+        self._free[shard].extend(tail)
         return tail
 
     def evict(self, owner) -> List[int]:
@@ -197,8 +250,13 @@ class PagedKVPool:
 
     # -- telemetry ---------------------------------------------------------
 
-    def page_msb_sparsity(self, pages: List[int]) -> np.ndarray:
+    def page_msb_sparsity(self, pages: List[int],
+                          shard: int = 0) -> np.ndarray:
         """Per-page sub-precision sparsity of the stored int4 nibbles.
+
+        ``pages`` are shard-local ids (as returned by :meth:`allocate`);
+        ``shard`` translates them onto the global page axis of the device
+        state (a no-op for an unsharded pool).
 
         The 4-bit analogue of the paper's MSB4 criterion: fraction of
         cached K/V nibbles already representable by the low-order 2-bit
@@ -211,7 +269,7 @@ class PagedKVPool:
         """
         if not pages:
             return np.zeros((0,), np.float32)
-        idx = jnp.asarray(pages, jnp.int32)
+        idx = jnp.asarray(pages, jnp.int32) + shard * self.pages_per_shard
         tot = None
         cnt = 0
         for path, leaf in jax.tree_util.tree_leaves_with_path(self.state):

@@ -140,6 +140,24 @@ class Scheduler:
         self.running: List[Request] = []
         self._free_slots = list(range(cfg.max_decode_batch))
         self._rid = itertools.count()
+        # mesh-sharded pool: decode slots partition contiguously over the
+        # pool's data shards, and a request's pages are pinned to its
+        # slot's shard (shard-local block-table ids; see PagedKVPool).
+        # Slots are deliberately handed out in the SAME ascending order
+        # as the unsharded scheduler — interleaving across shards would
+        # balance page pressure, but the slot index is the stable
+        # tie-break of MoE routing (sort by expert, then flat batch
+        # index), so diverging slot layouts would break the sharded-vs-
+        # single-device stream equivalence contract (docs/sharding.md)
+        assert cfg.max_decode_batch % pool.n_shards == 0, (
+            cfg.max_decode_batch, pool.n_shards)
+        self._slots_per_shard = cfg.max_decode_batch // pool.n_shards
+
+    def _shard(self, req: Request) -> int:
+        """Data shard of a request's decode slot (0 for unsharded pools)."""
+        if self.pool.n_shards == 1 or req.slot is None:
+            return 0
+        return req.slot // self._slots_per_shard
 
     # -- intake ------------------------------------------------------------
 
@@ -156,10 +174,12 @@ class Scheduler:
                 f"request needs {need} token slots but the block table "
                 f"caps a sequence at {cap} "
                 f"(max_pages_per_seq * page_size)")
-        if need > self.pool.n_usable_pages * self.pool.page_size:
+        if need > self.pool.usable_pages_per_shard * self.pool.page_size:
             raise ValueError(
-                f"request needs {need} token slots; pool holds only "
-                f"{self.pool.n_usable_pages * self.pool.page_size}")
+                f"request needs {need} token slots; every pool shard "
+                f"holds only "
+                f"{self.pool.usable_pages_per_shard * self.pool.page_size}"
+                f" (a request's pages live in one data shard)")
         if not prompt:
             raise ValueError("empty prompt")
         if sampling.max_new_tokens < 1:
@@ -227,7 +247,8 @@ class Scheduler:
         have = len(self.pool.pages_of(req.rid))
         if need <= have:
             return True
-        grown = self.pool.allocate(need - have, req.rid)
+        grown = self.pool.allocate(need - have, req.rid,
+                                   shard=self._shard(req))
         return grown is not None
 
     def schedule(self) -> StepPlan:
@@ -241,12 +262,17 @@ class Scheduler:
             if req.status != RUNNING:
                 continue
             while not self._ensure_decode_page(req):
+                # only a victim holding pages in the SAME data shard can
+                # relieve this request's pressure (per-shard free lists)
+                shard = self._shard(req)
                 victims = [r for r in self.running
-                           if r is not req and r.status == RUNNING]
+                           if r is not req and r.status == RUNNING
+                           and self._shard(r) == shard]
                 # mid-prefill waiters hold pages too — fair game, they
                 # haven't produced a token yet
                 victims += [r for r in self.waiting
-                            if r is not req and self.pool.pages_of(r.rid)]
+                            if r is not req and self.pool.pages_of(r.rid)
+                            and self.pool.shard_of(r.rid) == shard]
                 victim = max(victims, key=lambda r: (r.arrival, r.rid),
                              default=None)
                 if victim is None:
@@ -275,7 +301,8 @@ class Scheduler:
             need = self._pages_needed(req.prefilled + chunk)
             have = len(self.pool.pages_of(req.rid))
             if need > have:
-                if self.pool.allocate(need - have, req.rid) is None:
+                if self.pool.allocate(need - have, req.rid,
+                                      shard=self._shard(req)) is None:
                     break                 # pool pressure: wait for frees
             req.status = PREFILL
             plan.prefill.append((req, req.prefilled, chunk))
@@ -289,8 +316,16 @@ class Scheduler:
         if plan.empty and self.has_work() and not self.running:
             holders = [r for r in self.waiting
                        if self.pool.pages_of(r.rid)]
-            if len(holders) > 1:
-                self.preempt(max(holders, key=lambda r: (r.arrival, r.rid)))
+            by_shard: dict = {}
+            for r in holders:
+                by_shard.setdefault(self.pool.shard_of(r.rid), []).append(r)
+            # a shard with >1 holders is contended: evict its youngest so
+            # the older one can finish (unsharded pools: shard 0 holds
+            # everyone, reproducing the original global rule)
+            crowded = [rs for rs in by_shard.values() if len(rs) > 1]
+            if crowded:
+                self.preempt(max(crowded[0],
+                                 key=lambda r: (r.arrival, r.rid)))
                 return self.schedule()
             raise RuntimeError(
                 "scheduler gridlock: pool too small for the waiting work")

@@ -86,7 +86,7 @@ class SpeculativeEngine(Engine):
                  pool_config: Optional[PoolConfig] = None,
                  sched_config: Optional[SchedulerConfig] = None,
                  spec: SpecConfig = SpecConfig(),
-                 clock=time.monotonic):
+                 clock=time.monotonic, mesh=None):
         from repro.launch import steps as S
         self.spec = spec
         g = spec.gamma
@@ -95,12 +95,23 @@ class SpeculativeEngine(Engine):
             decode_tokens_per_slot=2 * g + 1,   # γ draft + (γ+1) verify
             decode_lookahead=g)
         super().__init__(cfg, params, pool_config=pool_config,
-                         sched_config=sched_config, clock=clock)
+                         sched_config=sched_config, clock=clock, mesh=mesh)
+        # draft/verify share the engine's mesh layout (self.mesh is None
+        # when no multi-device mesh was given): the LSB4-only draft and
+        # the batched verify run inside the same shard_map partitioning
+        # as the base decode step, so a sharded speculative stream is
+        # bit-exact vs the sharded (and single-device) base engine
         self._draft_fn = jax.jit(
-            S.make_engine_decode(cfg, msb_skip=True, with_telemetry=False),
+            S.make_engine_decode(cfg, msb_skip=True, with_telemetry=False,
+                                 mesh=self.mesh,
+                                 param_specs=self._param_specs,
+                                 pool_specs=self._pool_specs),
             donate_argnums=(1,))
-        self._verify_fn = jax.jit(S.make_engine_verify_window(cfg),
-                                  donate_argnums=(1,))
+        self._verify_fn = jax.jit(
+            S.make_engine_verify_window(cfg, mesh=self.mesh,
+                                        param_specs=self._param_specs,
+                                        pool_specs=self._pool_specs),
+            donate_argnums=(1,))
         # engine-level speculative counters (per-request ones live on
         # Request; these survive request handles going out of scope)
         self.draft_proposed_total = 0

@@ -1,0 +1,247 @@
+"""Mesh-sharded serving engine: stream equivalence + pool shard state.
+
+Acceptance criterion of the TP serving work (docs/sharding.md): on a
+forced multi-CPU-device mesh, the sharded ``Engine`` and
+``SpeculativeEngine`` greedy token streams are BYTE-identical to the
+single-device engine on transformer and MoE configs. These tests run in
+the CI `test-multidevice` lane (8 forced host devices) and skip cleanly
+on a single device via the `mesh` fixture.
+
+The pool shard-consistency property test and the validation-error tests
+are host-only and run everywhere.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # pragma: no cover
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs.base import ModelConfig
+from repro.core.qlinear import quantize_model_params
+from repro.models.schema import init_params
+from repro.models.schema_builder import build_schema
+from repro.serving import (Engine, PagedKVPool, PoolConfig, SamplingParams,
+                           SchedulerConfig, SpecConfig, SpeculativeEngine)
+
+# 2-way-TP-friendly transformer (n_kv_heads=2) and a 4-way variant
+CFG = ModelConfig(name="tiny-serve", family="transformer", n_layers=2,
+                  d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                  d_ff=64, vocab=128, dtype="float32")
+CFG_TP4 = ModelConfig(name="tiny-serve-tp4", family="transformer",
+                      n_layers=2, d_model=32, n_heads=8, n_kv_heads=4,
+                      head_dim=4, d_ff=64, vocab=128, dtype="float32")
+CFG_MOE = ModelConfig(name="tiny-moe-serve", family="moe", n_layers=4,
+                      d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                      d_ff=64, vocab=64, dtype="float32", n_experts=4,
+                      top_k=2, moe_every=2, moe_d_ff=32,
+                      router_type="softmax")
+
+
+def _qparams(cfg, seed=0):
+    fp = init_params(build_schema(cfg), jax.random.PRNGKey(seed))
+    return quantize_model_params(
+        fp, w_bits=4, k_percent=50.0, clip_l=-8.0, clip_h=23.0,
+        mode="sparqle", enable_clipping=True, tile_k=16)
+
+
+def _prompts(cfg, seed=0, lens=(9, 13, 7, 11)):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab, size=n).tolist() for n in lens]
+
+
+def _run(cfg, qp, prompts, mesh=None, gamma=0, gen=5):
+    kw = dict(pool_config=PoolConfig(n_pages=32, page_size=4),
+              sched_config=SchedulerConfig(max_decode_batch=4,
+                                           token_budget=64,
+                                           prefill_chunk=8,
+                                           max_pages_per_seq=8),
+              mesh=mesh)
+    eng = (SpeculativeEngine(cfg, qp, spec=SpecConfig(gamma=gamma), **kw)
+           if gamma else Engine(cfg, qp, **kw))
+    handles = [eng.submit(p, SamplingParams(max_new_tokens=gen))
+               for p in prompts]
+    eng.run()
+    return [h.out_tokens for h in handles], eng
+
+
+# ---------------------------------------------------------------------------
+# engine stream equivalence (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg,shape", [
+    (CFG, (1, 2)),            # pure 2-way tensor parallelism
+    (CFG, (2, 2)),            # data x model
+    (CFG_TP4, (1, 4)),        # 4-way tensor parallelism
+    (CFG_TP4, (2, 4)),        # the CI-lane mesh shape
+    (CFG_MOE, (1, 2)),        # MoE: expert-mlp sharding
+    (CFG_MOE, (2, 2)),        # MoE under a data-sharded decode batch
+], ids=["tf-1x2", "tf-2x2", "tf-1x4", "tf-2x4", "moe-1x2", "moe-2x2"])
+def test_engine_sharded_stream_matches_single_device(mesh, cfg, shape):
+    m = mesh(data=shape[0], model=shape[1])
+    qp = _qparams(cfg)
+    prompts = _prompts(cfg)
+    ref, ref_eng = _run(cfg, qp, prompts)
+    got, eng = _run(cfg, qp, prompts, mesh=m)
+    assert got == ref
+    # telemetry rides along bit-exact too (the hidden stream is
+    # replicated over model shards and exact by the psum argument)
+    assert eng.steps == ref_eng.steps
+    assert eng.pool.evictions == ref_eng.pool.evictions
+
+
+@pytest.mark.parametrize("cfg,seed", [(CFG, 0), (CFG_MOE, 1)],
+                         ids=["transformer", "moe"])
+def test_spec_engine_sharded_stream_matches_single_device(mesh, cfg, seed):
+    """Sharded speculative engine (draft + batched verify both inside
+    shard_map) emits the same greedy bytes as the single-device BASE
+    engine — speculation and sharding are both exactness-preserving."""
+    m = mesh(data=2, model=2)
+    qp = _qparams(cfg, seed=seed)
+    prompts = _prompts(cfg, seed=seed)
+    ref, _ = _run(cfg, qp, prompts)
+    got, eng = _run(cfg, qp, prompts, mesh=m, gamma=2)
+    assert got == ref
+    agg = eng.aggregate_stats()
+    assert agg["spec_gamma"] == 2 and agg["steps"] > 0
+
+
+def test_decode_step_sharded_logits_bitexact(mesh):
+    """Step-level check (no engine): one sharded decode_step_paged call
+    against the paged pool reproduces logits, pool writes and telemetry
+    of the unsharded call exactly."""
+    from repro.distributed import tp
+    from repro.launch import steps as S
+    m = mesh(model=2)
+    cfg = CFG
+    qp = _qparams(cfg)
+    pool = PagedKVPool(cfg, PoolConfig(n_pages=8, page_size=4))
+    pool.allocate(2, owner="a")
+    token = jnp.asarray([3, 0], jnp.int32)
+    pos = jnp.asarray([4, 0], jnp.int32)
+    tables = jnp.asarray([[1, 2], [0, 0]], jnp.int32)
+
+    ref_fn = S.make_engine_decode(cfg)
+    ref_logits, ref_pool, ref_tel = ref_fn(qp, pool.state, token, pos,
+                                           tables)
+
+    pspecs = tp.param_pspecs(qp)
+    poolspecs = tp.pool_pspecs(cfg, pool.pool_cfg, m)
+    sh_fn = S.make_engine_decode(cfg, mesh=m, param_specs=pspecs,
+                                 pool_specs=poolspecs)
+    qp_s = tp.device_put_tree(qp, pspecs, m)
+    state_s = tp.device_put_tree(
+        PagedKVPool(cfg, PoolConfig(n_pages=8, page_size=4)).state,
+        poolspecs, m)
+    got_logits, got_pool, got_tel = sh_fn(qp_s, state_s, token, pos,
+                                          tables)
+    np.testing.assert_array_equal(np.asarray(got_logits),
+                                  np.asarray(ref_logits))
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        got_pool, ref_pool)
+    for k in ref_tel:
+        np.testing.assert_array_equal(np.asarray(got_tel[k]),
+                                      np.asarray(ref_tel[k]))
+
+
+# ---------------------------------------------------------------------------
+# pool shard consistency (host-only; runs on any device count)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.property
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4]))
+def test_pool_shard_consistency_property(seed, n_shards):
+    """Drive two pools (the 'lock-step replicas' of the model-axis
+    shards) through one random allocate/evict/truncate/release sequence:
+    every operation must return identical page ids on both — the
+    invariant that lets one block table index every device shard — and
+    per-shard state must stay coherent (disjoint local free lists +
+    owned pages covering each sub-pool, owners pinned to one shard,
+    local null page never handed out)."""
+    rng = np.random.RandomState(seed)
+    cfgp = PoolConfig(n_pages=16, page_size=4)
+    pools = [PagedKVPool(CFG, cfgp, n_shards=n_shards) for _ in range(2)]
+    owners: dict = {}
+    for _ in range(40):
+        op = rng.randint(4)
+        if op == 0:                                       # allocate
+            owner = int(rng.randint(6))
+            shard = owners.get(owner, int(rng.randint(n_shards)))
+            n = int(rng.randint(1, 4))
+            got = [p.allocate(n, owner, shard=shard) for p in pools]
+            assert got[0] == got[1]                       # lock-step
+            if got[0]:
+                owners[owner] = shard
+        elif op == 1:                                     # truncate
+            owner = int(rng.randint(6))
+            tok = int(rng.randint(0, 20))
+            got = [p.truncate(owner, tok) for p in pools]
+            assert got[0] == got[1]
+            if owner in owners and not pools[0].pages_of(owner):
+                owners.pop(owner)
+        elif op == 2:                                     # evict
+            owner = int(rng.randint(6))
+            got = [p.evict(owner) for p in pools]
+            assert got[0] == got[1]
+            owners.pop(owner, None)
+        else:                                             # release
+            owner = int(rng.randint(6))
+            got = [p.release(owner) for p in pools]
+            assert got[0] == got[1]
+            owners.pop(owner, None)
+        p = pools[0]
+        per_shard = p.pages_per_shard
+        seen = [set() for _ in range(n_shards)]
+        for owner, pages in p._owned.items():
+            shard = p.shard_of(owner)
+            assert owners[owner] == shard                 # pinned
+            for pg in pages:
+                assert 1 <= pg < per_shard                # local, non-null
+                assert pg not in seen[shard]              # no double-grant
+                seen[shard].add(pg)
+        for s in range(n_shards):
+            frees = set(p._free[s])
+            assert 0 not in frees                         # null reserved
+            assert not (frees & seen[s])                  # disjoint
+            assert frees | seen[s] == set(range(1, per_shard))  # complete
+        assert pools[0].num_free == pools[1].num_free
+
+
+def test_pool_shard_capacity_and_validation():
+    pool = PagedKVPool(CFG, PoolConfig(n_pages=8, page_size=4), n_shards=2)
+    assert pool.pages_per_shard == 4
+    assert pool.n_usable_pages == 6          # one null page PER shard
+    assert pool.usable_pages_per_shard == 3
+    a = pool.allocate(3, "a", shard=0)
+    assert a is not None and pool.allocate(1, "x", shard=0) is None
+    assert pool.allocate(1, "b", shard=1) is not None   # other shard fine
+    with pytest.raises(ValueError):          # owners pin to one shard
+        pool.allocate(1, "a", shard=1)
+    with pytest.raises(ValueError):          # n_pages must divide
+        PagedKVPool(CFG, PoolConfig(n_pages=9, page_size=4), n_shards=2)
+    with pytest.raises(ValueError):          # >= 2 pages per shard
+        PagedKVPool(CFG, PoolConfig(n_pages=4, page_size=4), n_shards=4)
+
+
+def test_engine_mesh_validation_lists_indivisible_dims(mesh):
+    """Engine(mesh=...) must reject configs the model axis cannot divide,
+    naming every offending dimension."""
+    m = mesh(data=1, model=4)
+    bad = CFG                                # n_kv_heads=2 % 4 != 0
+    with pytest.raises(ValueError, match="n_kv_heads"):
+        Engine(bad, _qparams(bad), mesh=m)
+
+
+def test_engine_mesh_rejects_indivisible_decode_batch(mesh):
+    m = mesh(data=2, model=1)
+    with pytest.raises(ValueError, match="max_decode_batch"):
+        Engine(CFG, _qparams(CFG),
+               pool_config=PoolConfig(n_pages=8, page_size=4),
+               sched_config=SchedulerConfig(max_decode_batch=3),
+               mesh=m)
