@@ -166,7 +166,8 @@ def _make_engine(cfg, qparams, spec_gamma: int, mesh=None):
                   mesh=mesh)
 
 
-def _report(emit, prefix, handles, wall, agg):
+def _report(emit, prefix, handles, wall, eng):
+    agg = eng.aggregate_stats()
     stats = [h.stats() for h in handles]
     n_tok = sum(s["n_generated"] for s in stats)
     ttft = np.array([s["ttft_s"] for s in stats])
@@ -181,6 +182,17 @@ def _report(emit, prefix, handles, wall, agg):
     emit(f"{prefix}/ttft_p95_ms", float(np.percentile(ttft, 95) * 1e3), "")
     emit(f"{prefix}/tpot_mean_ms", float(tpot.mean() * 1e3),
          "inter-token latency")
+    # histogram-estimated percentiles from the metrics registry — the
+    # same numbers a production scrape would see (bucket-interpolated,
+    # so coarser than the exact per-request arrays above)
+    r = eng.obs.registry
+    for hname, key in (("serving_ttft_seconds", "ttft"),
+                       ("serving_tpot_seconds", "tpot")):
+        hist = r.get(hname)
+        for q in (50, 99):
+            p = hist.percentile(q)
+            emit(f"{prefix}/{key}_p{q}_ms", float(p * 1e3),
+                 f"registry histogram estimate, {hist.count()} samples")
     emit(f"{prefix}/act_sparsity_pct", float(spars.mean() * 100),
          "decode-time MSB4 sub-precision sparsity")
     if "wire_compression_pct" in agg:
@@ -196,7 +208,8 @@ def _report(emit, prefix, handles, wall, agg):
 
 
 def run(emit, n_requests: int = 8, rate_hz: float = 2.0, seed: int = 0,
-        spec_gamma: int = 0, mesh=None) -> None:
+        spec_gamma: int = 0, mesh=None):
+    """Run the bench; returns {prefix: engine} for artifact export."""
     cfg = BENCH_CFG
     params = draft_friendly_params(cfg, seed=seed)
     qparams = quantize_model_params(
@@ -204,19 +217,20 @@ def run(emit, n_requests: int = 8, rate_hz: float = 2.0, seed: int = 0,
         mode="sparqle", enable_clipping=True, tile_k=16)
     trace = _poisson_trace(np.random.default_rng(seed), n_requests, rate_hz)
 
+    engines = {}
     eng = _make_engine(cfg, qparams, 0)
+    engines["serving"] = eng
     handles, wall = _drive(eng, trace)
-    base_tpot = _report(emit, "serving", handles, wall,
-                        eng.aggregate_stats())
+    base_tpot = _report(emit, "serving", handles, wall, eng)
 
     jmesh = None
     if mesh is not None:
         from repro.launch.mesh import make_smoke_mesh
         jmesh = make_smoke_mesh(data=mesh[0], model=mesh[1])
         meng = _make_engine(cfg, qparams, 0, mesh=jmesh)
+        engines["serving_mesh"] = meng
         mesh_handles, mesh_wall = _drive(meng, trace)
-        _report(emit, "serving_mesh", mesh_handles, mesh_wall,
-                meng.aggregate_stats())
+        _report(emit, "serving_mesh", mesh_handles, mesh_wall, meng)
         match = all(hb.out_tokens == hm.out_tokens
                     for hb, hm in zip(handles, mesh_handles))
         emit("serving_mesh/tokens_match_single_device", int(match),
@@ -224,11 +238,13 @@ def run(emit, n_requests: int = 8, rate_hz: float = 2.0, seed: int = 0,
              f"to the single-device engine")
 
     if spec_gamma <= 0:
-        return
+        return engines
     spec_eng = _make_engine(cfg, qparams, spec_gamma, mesh=jmesh)
+    engines["serving_spec"] = spec_eng
     spec_handles, spec_wall = _drive(spec_eng, trace)
     agg = spec_eng.aggregate_stats()
-    spec_tpot = _report(emit, "serving_spec", spec_handles, spec_wall, agg)
+    spec_tpot = _report(emit, "serving_spec", spec_handles, spec_wall,
+                        spec_eng)
     emit("serving_spec/gamma", spec_gamma, "draft tokens per verify cycle")
     emit("serving_spec/acceptance_rate",
          agg.get("spec_acceptance_rate", float("nan")),
@@ -243,6 +259,7 @@ def run(emit, n_requests: int = 8, rate_hz: float = 2.0, seed: int = 0,
                 for hb, hs in zip(handles, spec_handles))
     emit("serving_spec/tokens_match_baseline", int(match),
          "greedy spec stream byte-identical to non-speculative engine")
+    return engines
 
 
 def main() -> None:
@@ -265,6 +282,12 @@ def main() -> None:
                          "machine-readable result the CI regression gate "
                          "compares against benchmarks/baselines/"
                          "serving.json (benchmarks/check_regression.py)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write each engine's metrics-registry snapshot "
+                         "(JSON, {prefix: snapshot}) to this path")
+    ap.add_argument("--trace-out", default="",
+                    help="write the base engine's Chrome trace-event "
+                         "JSON here — load in Perfetto / chrome://tracing")
     args = ap.parse_args()
     mesh = None
     if args.mesh:
@@ -277,8 +300,8 @@ def main() -> None:
         records[name] = float(value)
         print(f"{name},{value:.6g},{desc}", flush=True)
 
-    run(emit, n_requests=args.requests, rate_hz=args.rate, seed=args.seed,
-        spec_gamma=args.spec_gamma, mesh=mesh)
+    engines = run(emit, n_requests=args.requests, rate_hz=args.rate,
+                  seed=args.seed, spec_gamma=args.spec_gamma, mesh=mesh)
 
     # stream-match metrics are hard invariants, not observations: the CI
     # smoke steps rely on a nonzero exit when equivalence breaks
@@ -287,17 +310,30 @@ def main() -> None:
                              "tokens_match_single_device")) and v != 1.0]
 
     if args.json:
+        from benchmarks.common import provenance_meta
         payload = {
             "meta": {"bench": "bench_serving", "config": BENCH_CFG.name,
                      "requests": args.requests, "rate_hz": args.rate,
                      "seed": args.seed, "spec_gamma": args.spec_gamma,
-                     "mesh": list(mesh) if mesh else None},
+                     "mesh": list(mesh) if mesh else None,
+                     **provenance_meta(BENCH_CFG)},
             "metrics": records,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"wrote {args.json}", flush=True)
+
+    if args.metrics_out:
+        snaps = {pfx: eng.metrics_snapshot()
+                 for pfx, eng in engines.items()}
+        with open(args.metrics_out, "w") as f:
+            json.dump(snaps, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.metrics_out}", flush=True)
+    if args.trace_out:
+        engines["serving"].obs.tracer.export_chrome(args.trace_out)
+        print(f"wrote {args.trace_out}", flush=True)
 
     if broken:
         raise SystemExit(f"token-stream equivalence FAILED: {broken}")

@@ -1,0 +1,83 @@
+"""CI schema gate for observability artifacts.
+
+    python -m benchmarks.check_metrics_schema \
+        --metrics metrics.json --trace trace.json
+
+``--metrics`` is a ``bench_serving --metrics-out`` file ({prefix:
+registry snapshot}) or a bare registry snapshot (``launch/serve.py
+--metrics-out``); ``--trace`` is a Chrome trace-event JSON. Both are
+validated against the contracts in ``repro.obs.validate``: every metric
+name matches ``^[a-z][a-z0-9_]*$`` and carries a declared unit, histogram
+bucket counts are self-consistent, and every trace event is something
+Perfetto / chrome://tracing will load. Exit 1 with a problem listing on
+any violation — the CI lanes run this on the artifacts they upload.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.validate import validate_chrome_trace, validate_snapshot
+
+
+def _looks_like_snapshot(doc: dict) -> bool:
+    return any(isinstance(v, dict) and "type" in v and "series" in v
+               for v in doc.values())
+
+
+def check_metrics_file(path: str) -> list:
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict):
+        return [f"{path}: expected a JSON object"]
+    snaps = {"": doc} if _looks_like_snapshot(doc) else doc
+    problems = []
+    n_metrics = 0
+    for prefix, snap in snaps.items():
+        if not isinstance(snap, dict):
+            problems.append(f"{prefix or path}: snapshot is not an object")
+            continue
+        n_metrics += len(snap)
+        problems.extend(f"{prefix + ': ' if prefix else ''}{p}"
+                        for p in validate_snapshot(snap))
+    print(f"{path}: {n_metrics} metrics across {len(snaps)} snapshot(s)")
+    return problems
+
+
+def check_trace_file(path: str) -> list:
+    with open(path) as f:
+        doc = json.load(f)
+    problems = validate_chrome_trace(doc)
+    events = doc.get("traceEvents", []) if isinstance(doc, dict) else []
+    print(f"{path}: {len(events)} trace events")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--metrics", action="append", default=[],
+                    help="metrics snapshot JSON to validate (repeatable)")
+    ap.add_argument("--trace", action="append", default=[],
+                    help="Chrome trace JSON to validate (repeatable)")
+    args = ap.parse_args(argv)
+    if not args.metrics and not args.trace:
+        ap.error("nothing to check: pass --metrics and/or --trace")
+
+    problems = []
+    for path in args.metrics:
+        problems.extend(check_metrics_file(path))
+    for path in args.trace:
+        problems.extend(check_trace_file(path))
+
+    if problems:
+        print(f"\nSCHEMA: {len(problems)} problem(s):")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print("\nall observability artifacts pass the schema gate")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

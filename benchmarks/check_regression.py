@@ -20,6 +20,12 @@ Metrics are gated by class:
 
 Extra metrics in the result are reported but not gated; metrics missing
 from the result fail (the bench silently lost coverage).
+
+Provenance (``meta.git_sha`` / ``meta.jax_version`` /
+``meta.config_hash``, stamped by ``benchmarks.common.provenance_meta``)
+is echoed for both files so a gate failure in CI says exactly which
+commit and jax produced each side; a config-hash mismatch is flagged
+(the comparison is then apples-to-oranges) but does not gate.
 """
 from __future__ import annotations
 
@@ -40,6 +46,19 @@ def classify(name: str) -> str:
     if any(k in short for k in EXACT_KEYS):
         return "exact"
     return "ratio"
+
+
+def echo_provenance(result: dict, baseline: dict) -> None:
+    for tag, payload in (("result", result), ("baseline", baseline)):
+        meta = payload.get("meta", {})
+        print(f"{tag}: git={meta.get('git_sha', '?')[:12]} "
+              f"jax={meta.get('jax_version', '?')} "
+              f"config={meta.get('config_hash', '?')}")
+    rc = result.get("meta", {}).get("config_hash")
+    bc = baseline.get("meta", {}).get("config_hash")
+    if rc and bc and rc != bc:
+        print("WARNING: bench config hash differs from baseline — "
+              "comparison is apples-to-oranges (regenerate the baseline)")
 
 
 def check(result: dict, baseline: dict, rel_tol: float,
@@ -93,6 +112,7 @@ def main(argv=None) -> int:
     with open(args.baseline) as f:
         baseline = json.load(f)
 
+    echo_provenance(result, baseline)
     failures = check(result, baseline, args.rel_tol, args.timing_factor)
     if failures:
         print(f"\nREGRESSION: {len(failures)} metric(s) failed the gate:")

@@ -27,6 +27,31 @@ from repro.optim.adamw import OptConfig, init_opt_state
 
 RUNS = os.path.join(os.path.dirname(__file__), "..", "runs")
 
+
+def provenance_meta(cfg: ModelConfig = None) -> Dict[str, str]:
+    """Provenance stamp for benchmark ``meta`` blocks: git SHA, jax
+    version, and a hash of the bench model config — enough to answer
+    "what exactly produced this number" when comparing result files
+    from different checkouts."""
+    import dataclasses
+    import hashlib
+    import json as _json
+    import subprocess
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        sha = ""
+    out = {"git_sha": sha or "unknown", "jax_version": jax.__version__}
+    if cfg is not None:
+        blob = _json.dumps(dataclasses.asdict(cfg), sort_keys=True,
+                           default=str)
+        out["config_hash"] = hashlib.sha256(
+            blob.encode()).hexdigest()[:16]
+    return out
+
 BENCH_CFG = ModelConfig(
     name="bench-llama-6m", family="transformer", n_layers=4, d_model=256,
     n_heads=8, n_kv_heads=4, d_ff=704, vocab=512, rope_theta=10_000.0)

@@ -15,6 +15,13 @@ stuck *step* never loses more than the work since the last checkpoint:
     exercised in tests with ``FaultInjector``.
   * ``FaultInjector`` deterministically fails chosen steps (or sleeps to
     fake a straggler) so the recovery path is testable on one host.
+
+Pass ``registry=`` (a ``repro.obs.MetricsRegistry``) to RestartableLoop
+to mirror the ``LoopReport`` counters into named metrics — steps run,
+faults, restarts, restores, checkpoints, plus a fault-time-lost gauge
+(work redone: time between the restored-from checkpoint and the fault)
+— so a serving/training job exposes recovery health on the same scrape
+as everything else (docs/observability.md).
 """
 from __future__ import annotations
 
@@ -109,6 +116,7 @@ class RestartableLoop:
         injector: Optional[FaultInjector] = None,
         async_ckpt: bool = False,
         state_shardings: Optional[Any] = None,
+        registry: Optional[Any] = None,
     ):
         self.step_fn = step_fn
         self.make_batch = make_batch
@@ -120,12 +128,39 @@ class RestartableLoop:
         self.writer = (store.AsyncWriter(ckpt_dir) if async_ckpt else None)
         self.state_shardings = state_shardings
         self.report = LoopReport()
+        self._last_ckpt_t: Optional[float] = None
+        if registry is not None:
+            self._m_steps = registry.counter(
+                "fault_steps_run_total", "train steps completed by the "
+                "restartable loop", unit="steps")
+            self._m_faults = registry.counter(
+                "fault_faults_total", "step faults seen (injected or "
+                "real, incl. straggler deadline trips)", unit="faults")
+            self._m_restarts = registry.counter(
+                "fault_restarts_total", "successful restore-and-replay "
+                "restarts", unit="restarts")
+            self._m_restores = registry.counter(
+                "fault_restores_total", "checkpoint restores performed",
+                unit="restores")
+            self._m_ckpts = registry.counter(
+                "fault_checkpoints_total", "checkpoints written (sync "
+                "and async submits)", unit="checkpoints")
+            self._g_time_lost = registry.gauge(
+                "fault_time_lost_seconds", "cumulative wall time redone: "
+                "step work between the restored-from checkpoint and each "
+                "fault", unit="seconds")
+        else:
+            self._m_steps = self._m_faults = self._m_restarts = None
+            self._m_restores = self._m_ckpts = self._g_time_lost = None
 
     def _save(self, state: Any, step: int) -> None:
         if self.writer is not None:
             self.writer.submit(state, step)
         else:
             store.save(self.ckpt_dir, state, step)
+        self._last_ckpt_t = time.monotonic()
+        if self._m_ckpts is not None:
+            self._m_ckpts.inc()
 
     def _restore_latest(self, like: Any):
         step = store.latest_step(self.ckpt_dir)
@@ -134,6 +169,8 @@ class RestartableLoop:
         state = store.restore(self.ckpt_dir, step, like,
                               self.state_shardings)
         self.report.restores += 1
+        if self._m_restores is not None:
+            self._m_restores.inc()
         return step, state
 
     def run(self, state: Any, start_step: int, n_steps: int):
@@ -157,10 +194,17 @@ class RestartableLoop:
                 self.monitor.raise_if_tripped()
                 step += 1
                 self.report.steps_run += 1
+                if self._m_steps is not None:
+                    self._m_steps.inc()
                 if step % self.ckpt_every == 0:
                     self._save(state, step)
             except (StepFault, StragglerTimeout) as e:
                 self.report.faults_seen += 1
+                if self._m_faults is not None:
+                    self._m_faults.inc()
+                    if self._last_ckpt_t is not None:
+                        self._g_time_lost.inc(
+                            time.monotonic() - self._last_ckpt_t)
                 restarts += 1
                 if restarts > self.max_restarts:
                     raise RuntimeError("restart budget exhausted") from e
@@ -169,6 +213,8 @@ class RestartableLoop:
                     raise
                 step, state = restored
                 self.report.restarts += 1
+                if self._m_restarts is not None:
+                    self._m_restarts.inc()
         self._save(state, step)          # final checkpoint
         if self.writer is not None:
             self.writer.close()

@@ -64,7 +64,7 @@ def _legacy_serve(cfg, qparams, batch, plen, args) -> None:
           f"{t_decode*1e3:.1f} ms/token (CPU interpret timings)")
 
 
-def _engine_serve(cfg, qparams, prompts, args, serve_mesh=None) -> None:
+def _engine_serve(cfg, qparams, prompts, args, serve_mesh=None):
     from repro.serving import (Engine, PoolConfig, SamplingParams,
                                SchedulerConfig, SpecConfig,
                                SpeculativeEngine)
@@ -131,6 +131,7 @@ def _engine_serve(cfg, qparams, prompts, args, serve_mesh=None) -> None:
               f"{agg['spec_tokens_per_step']:.2f} tokens/cycle")
     print(f"  pool: {agg['pool_utilization']*100:.0f}% pages in use at "
           f"drain, {agg['pool_evictions']} evictions")
+    return eng
 
 
 def main(argv=None) -> None:
@@ -160,6 +161,13 @@ def main(argv=None) -> None:
     ap.add_argument("--spec-gamma", type=int, default=0,
                     help="self-speculative decoding: LSB4-only draft "
                          "window per verify cycle (0 = off)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the engine's metrics-registry snapshot "
+                         "(JSON) here after the run (engine path only)")
+    ap.add_argument("--trace-out", default="",
+                    help="write the engine's Chrome trace-event JSON "
+                         "here after the run — load in Perfetto / "
+                         "chrome://tracing (engine path only)")
     ap.add_argument("--mesh", default="",
                     help="DATA,MODEL device mesh for the engine (e.g. "
                          "'2,4'): decode slots + pool pages shard over "
@@ -186,6 +194,10 @@ def main(argv=None) -> None:
         if args.legacy:
             raise SystemExit("--mesh drives the paged engine; it has no "
                              "effect on --legacy (drop one of the two)")
+    if args.legacy and (args.metrics_out or args.trace_out):
+        raise SystemExit("--metrics-out/--trace-out read the paged "
+                         "engine's observability bundle; the --legacy "
+                         "path has none (drop one of the two)")
     # ambient 1x1 mesh for the GSPMD tail paths (sparsity/cost-model
     # report); the engine gets the serving mesh explicitly
     mesh = make_smoke_mesh()
@@ -227,8 +239,16 @@ def main(argv=None) -> None:
             except NotImplementedError as e:
                 raise SystemExit(
                     f"{e}\n(this arch serves via --legacy only)")
-            _engine_serve(cfg, qparams, list(np.asarray(prompts)), args,
-                          serve_mesh=serve_mesh)
+            eng = _engine_serve(cfg, qparams, list(np.asarray(prompts)),
+                                args, serve_mesh=serve_mesh)
+            if args.metrics_out:
+                import json
+                with open(args.metrics_out, "w") as f:
+                    json.dump(eng.metrics_snapshot(), f, indent=1)
+                print(f"  metrics snapshot -> {args.metrics_out}")
+            if args.trace_out:
+                eng.obs.tracer.export_chrome(args.trace_out)
+                print(f"  chrome trace     -> {args.trace_out}")
 
         # achieved sub-precision sparsity of the hidden stream
         hidden = M.forward_hidden(cfg, qparams, batch)

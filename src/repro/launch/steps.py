@@ -241,6 +241,24 @@ def _mesh_layout(cfg: ModelConfig, mesh: Mesh):
     return shard_model_config(cfg, mways), mways, daxis
 
 
+def with_trace_annotation(name: str, fn):
+    """Wrap an already-compiled step so each CALL runs inside
+    ``jax.profiler.TraceAnnotation(name)`` — the annotation brackets the
+    host-side dispatch, it is never traced into the computation, so the
+    wrapped fn's jaxpr/HLO and donation behavior are untouched. No-op
+    passthrough if the profiler API is unavailable."""
+    try:
+        annotation = jax.profiler.TraceAnnotation
+    except AttributeError:
+        return fn
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        with annotation(name):
+            return fn(*args, **kwargs)
+    return wrapped
+
+
 def make_engine_prefill_chunk(cfg: ModelConfig, *,
                               mesh: Optional[Mesh] = None,
                               param_specs=None, pool_specs=None):

@@ -1,0 +1,48 @@
+"""Dependency-free serving observability: metrics registry + span tracing.
+
+  * metrics  — process-local registry of named counters / gauges /
+               fixed-bucket histograms (labels, declared units,
+               percentile estimation, snapshot-to-dict, Prometheus-style
+               ``render_text``), with an injectable clock
+  * trace    — ring-buffered span tracer exporting Chrome trace-event
+               JSON (Perfetto-loadable), per-request lifecycle tracks,
+               optional ``jax.profiler.TraceAnnotation`` pass-through
+  * validate — artifact schema validators shared by tests and the CI
+               metric-name/unit check
+
+:class:`Observability` bundles one registry + one tracer around a shared
+clock; the serving engine owns one and threads it through the scheduler,
+page pool and speculative decoder (see docs/observability.md).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.obs.metrics import (DEFAULT_LATENCY_BUCKETS, METRIC_NAME_RE,
+                               Counter, Gauge, Histogram, MetricsRegistry)
+from repro.obs.trace import (ENGINE_TRACK, REQUEST_TRACK_BASE, SpanHandle,
+                             Tracer)
+from repro.obs.validate import validate_chrome_trace, validate_snapshot
+
+
+class Observability:
+    """One registry + one tracer sharing one (injectable) clock.
+
+    The unit every instrumented subsystem receives: the engine creates
+    one per instance (metrics are process-local to an engine, matching
+    ``aggregate_stats``'s scope) and hands it to the scheduler and pool.
+    ``trace=False`` keeps the registry live but makes spans no-ops.
+    """
+
+    def __init__(self, clock=time.monotonic, trace_capacity: int = 65536,
+                 trace: bool = True, xla_annotations: bool = False):
+        self.registry = MetricsRegistry(clock=clock)
+        self.tracer = Tracer(clock=clock, capacity=trace_capacity,
+                             enabled=trace,
+                             xla_annotations=xla_annotations)
+
+
+__all__ = ["Counter", "DEFAULT_LATENCY_BUCKETS", "ENGINE_TRACK", "Gauge",
+           "Histogram", "METRIC_NAME_RE", "MetricsRegistry",
+           "Observability", "REQUEST_TRACK_BASE", "SpanHandle", "Tracer",
+           "validate_chrome_trace", "validate_snapshot"]

@@ -1,0 +1,118 @@
+"""Schema validators for observability artifacts.
+
+Shared by the unit tests and ``benchmarks/check_metrics_schema.py`` (the
+CI check): one source of truth for what a valid registry snapshot and a
+valid (Perfetto-loadable) Chrome trace look like. Each validator returns
+a list of human-readable problems — empty means valid.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List
+
+from repro.obs.metrics import METRIC_NAME_RE
+
+_KINDS = ("counter", "gauge", "histogram")
+_PHASES = ("B", "E", "X", "i", "I", "M", "C")
+
+
+def validate_snapshot(snap: Dict) -> List[str]:
+    """Problems in a ``MetricsRegistry.snapshot()`` dict."""
+    problems: List[str] = []
+    if not isinstance(snap, dict):
+        return [f"snapshot must be a dict, got {type(snap).__name__}"]
+    for name, entry in snap.items():
+        where = f"metric {name!r}"
+        if not METRIC_NAME_RE.match(str(name)):
+            problems.append(f"{where}: name must match "
+                            f"{METRIC_NAME_RE.pattern}")
+        if not isinstance(entry, dict):
+            problems.append(f"{where}: entry must be a dict")
+            continue
+        kind = entry.get("type")
+        if kind not in _KINDS:
+            problems.append(f"{where}: type {kind!r} not in {_KINDS}")
+        if not entry.get("unit"):
+            problems.append(f"{where}: missing declared unit")
+        series = entry.get("series")
+        if not isinstance(series, list):
+            problems.append(f"{where}: series must be a list")
+            continue
+        for i, s in enumerate(series):
+            sw = f"{where} series[{i}]"
+            if not isinstance(s.get("labels"), dict):
+                problems.append(f"{sw}: missing labels dict")
+                continue
+            for ln in s["labels"]:
+                if not METRIC_NAME_RE.match(str(ln)):
+                    problems.append(f"{sw}: bad label name {ln!r}")
+            if kind == "histogram":
+                buckets = entry.get("buckets")
+                if (not isinstance(buckets, list) or not buckets
+                        or buckets != sorted(buckets)):
+                    problems.append(f"{where}: histogram needs ascending "
+                                    f"buckets")
+                    continue
+                counts = s.get("bucket_counts")
+                if (not isinstance(counts, list)
+                        or len(counts) != len(buckets) + 1):
+                    problems.append(f"{sw}: bucket_counts must have "
+                                    f"len(buckets)+1 entries")
+                elif sum(counts) != s.get("count"):
+                    problems.append(f"{sw}: bucket_counts sum "
+                                    f"{sum(counts)} != count "
+                                    f"{s.get('count')}")
+                if not isinstance(s.get("sum"), (int, float)):
+                    problems.append(f"{sw}: missing sum")
+                for p in ("p50", "p90", "p99"):
+                    if p not in s:
+                        problems.append(f"{sw}: missing {p}")
+            else:
+                v = s.get("value")
+                if not isinstance(v, (int, float)):
+                    problems.append(f"{sw}: missing scalar value")
+    return problems
+
+
+def validate_chrome_trace(trace: Dict) -> List[str]:
+    """Problems in a Chrome trace-event JSON object.
+
+    Checks the event schema Perfetto/chrome://tracing require: a
+    ``traceEvents`` list whose entries carry name/ph/pid/tid, numeric
+    finite ``ts`` for timed phases, and a non-negative ``dur`` on every
+    complete ("X") event.
+    """
+    problems: List[str] = []
+    if not isinstance(trace, dict):
+        return [f"trace must be a dict, got {type(trace).__name__}"]
+    events = trace.get("traceEvents")
+    if not isinstance(events, list):
+        return ["trace.traceEvents must be a list"]
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            problems.append(f"{where}: event must be a dict")
+            continue
+        if not isinstance(ev.get("name"), str) or not ev.get("name"):
+            problems.append(f"{where}: missing name")
+        ph = ev.get("ph")
+        if ph not in _PHASES:
+            problems.append(f"{where}: bad phase {ph!r}")
+            continue
+        for idkey in ("pid", "tid"):
+            if not isinstance(ev.get(idkey), int):
+                problems.append(f"{where}: {idkey} must be an int")
+        if ph != "M":
+            ts = ev.get("ts")
+            if (not isinstance(ts, (int, float)) or not math.isfinite(ts)
+                    or ts < 0):
+                problems.append(f"{where}: ts must be a finite "
+                                f"non-negative number")
+        if ph == "X":
+            dur = ev.get("dur")
+            if (not isinstance(dur, (int, float))
+                    or not math.isfinite(dur) or dur < 0):
+                problems.append(f"{where}: X event needs non-negative dur")
+        if "args" in ev and not isinstance(ev["args"], dict):
+            problems.append(f"{where}: args must be a dict")
+    return problems

@@ -10,13 +10,18 @@
                   shape-static jitted steps (see docs/serving.md)
   * spec_decode — self-speculative decoding: γ LSB4-only draft steps +
                   one batched full-precision verify per cycle
+
+Every engine owns (or is handed) a ``repro.obs.Observability`` bundle —
+metrics registry + span tracer — that the pool, scheduler and step loop
+feed host-side (docs/observability.md).
 """
+from repro.obs import Observability
 from repro.serving.engine import Engine
 from repro.serving.kv_pool import PagedKVPool, PoolConfig
 from repro.serving.scheduler import (Request, SamplingParams, Scheduler,
                                      SchedulerConfig)
 from repro.serving.spec_decode import SpecConfig, SpeculativeEngine
 
-__all__ = ["Engine", "PagedKVPool", "PoolConfig", "Request",
-           "SamplingParams", "Scheduler", "SchedulerConfig", "SpecConfig",
-           "SpeculativeEngine"]
+__all__ = ["Engine", "Observability", "PagedKVPool", "PoolConfig",
+           "Request", "SamplingParams", "Scheduler", "SchedulerConfig",
+           "SpecConfig", "SpeculativeEngine"]

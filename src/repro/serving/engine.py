@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.model import check_paged_support
+from repro.obs import Observability
 from repro.serving.kv_pool import PagedKVPool, PoolConfig
 from repro.serving.scheduler import (FINISHED, Request, SamplingParams,
                                      Scheduler, SchedulerConfig)
@@ -38,7 +39,8 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params,
                  pool_config: Optional[PoolConfig] = None,
                  sched_config: Optional[SchedulerConfig] = None,
-                 clock=time.monotonic, mesh=None):
+                 clock=time.monotonic, mesh=None,
+                 obs: Optional[Observability] = None):
         """``mesh`` (a ("data", "model") Mesh, e.g. ``make_smoke_mesh``)
         makes the engine mesh-native: the jitted steps run inside
         shard_map with weights tensor-parallel on "model", the paged pool
@@ -47,10 +49,21 @@ class Engine:
         greedy token streams are unchanged — sharded steps are bit-exact
         vs the single-device ones (docs/sharding.md). A 1-device mesh
         (or None) keeps the original single-device path.
+
+        ``obs`` (``repro.obs.Observability``) is the engine's metrics
+        registry + span tracer; by default the engine creates its own
+        around ``clock``. Every layer of the stack reports into it
+        (docs/observability.md) and it backs ``aggregate_stats()``,
+        ``metrics_snapshot()`` and the ``--metrics-out``/``--trace-out``
+        artifacts. Instrumentation is host-side only — the traced/jitted
+        step programs are unchanged.
         """
         from repro.launch import steps as S
         check_paged_support(cfg)
         self.cfg = cfg
+        self._clock = clock
+        self.obs = obs if obs is not None else Observability(clock=clock)
+        self._init_metrics()
         self.mesh = mesh if (mesh is not None and mesh.size > 1) else None
         pool_config = pool_config or PoolConfig()
         sched_config = sched_config or SchedulerConfig()
@@ -74,13 +87,12 @@ class Engine:
             self._param_specs = self._pool_specs = None
         self.params = params
         self.pool = PagedKVPool(cfg, pool_config,
-                                n_shards=self._data_ways)
+                                n_shards=self._data_ways, obs=self.obs)
         if self.mesh is not None:
             from repro.distributed import tp
             self.pool.state = tp.device_put_tree(
                 self.pool.state, self._pool_specs, self.mesh)
-        self.sched = Scheduler(self.pool, sched_config)
-        self._clock = clock
+        self.sched = Scheduler(self.pool, sched_config, obs=self.obs)
         scfg = self.sched.cfg
         self._chunk = scfg.prefill_chunk
         self._n_slots = scfg.max_decode_batch
@@ -102,10 +114,57 @@ class Engine:
         self.steps = 0
         # per-layer measured wire-format telemetry (lazily sized (L,) on
         # the first step's telemetry): MEASURED packed activation bytes vs
-        # the dense int8 baseline, summed over every processed token
+        # the dense int8 baseline, plus token-weighted MSB4 sparsity,
+        # summed over every telemetered token
         self.layer_wire_bytes: Optional[np.ndarray] = None
         self.layer_dense_bytes: Optional[np.ndarray] = None
+        self.layer_sparsity_sum: Optional[np.ndarray] = None
         self.wire_tokens = 0
+
+    def _init_metrics(self) -> None:
+        """Register the engine's metrics (idempotent via the registry's
+        create-or-get). Scheduler/pool metrics register in their own
+        constructors against the same registry."""
+        r = self.obs.registry
+        self._m_steps = r.counter(
+            "serving_engine_steps_total", "scheduler iterations run",
+            unit="steps")
+        self._m_tokens = r.counter(
+            "serving_tokens_processed_total", "compute tokens through the "
+            "jitted steps, by phase", unit="tokens", labelnames=("phase",))
+        self._m_emitted = r.counter(
+            "serving_tokens_emitted_total", "sampled tokens handed to "
+            "requests", unit="tokens")
+        self._m_ttft = r.histogram(
+            "serving_ttft_seconds", "request arrival to first emitted "
+            "token", unit="seconds")
+        self._m_tpot = r.histogram(
+            "serving_tpot_seconds", "gap between consecutive emitted "
+            "tokens of one request", unit="seconds")
+        self._m_step_lat = r.histogram(
+            "serving_step_seconds", "host-side latency of one engine-step "
+            "phase (includes device sync)", unit="seconds",
+            labelnames=("phase",))
+        self._m_wire = r.counter(
+            "serving_wire_bytes_total", "measured packed-wire activation "
+            "bytes (inter-layer hidden stream)", unit="bytes")
+        self._m_dense = r.counter(
+            "serving_dense_bytes_total", "dense int8 baseline bytes for "
+            "the same activations", unit="bytes")
+        self._g_pool_free = r.gauge(
+            "serving_pool_pages_free", "free pages across all shards",
+            unit="pages")
+        self._g_pool_util = r.gauge(
+            "serving_pool_utilization_ratio", "fraction of usable pages "
+            "allocated", unit="ratio")
+        self._g_layer_wire = r.gauge(
+            "serving_layer_wire_bytes_per_token", "measured wire bytes "
+            "per telemetered token entering each layer", unit="bytes",
+            labelnames=("layer",))
+        self._g_layer_sparsity = r.gauge(
+            "serving_layer_msb_sparsity_ratio", "token-weighted MSB4 "
+            "sub-precision sparsity of the hidden stream entering each "
+            "layer", unit="ratio", labelnames=("layer",))
 
     # -- public API --------------------------------------------------------
 
@@ -137,13 +196,30 @@ class Engine:
         raise RuntimeError(f"engine did not drain in {max_steps} steps")
 
     def step(self) -> List[Tuple[int, int]]:
-        """One scheduler iteration. Returns [(rid, token), ...] emitted."""
-        plan = self.sched.schedule()
+        """One scheduler iteration. Returns [(rid, token), ...] emitted.
+
+        Each phase (schedule / per-chunk prefill / decode batch) is timed
+        into ``serving_step_seconds{phase=}`` and spanned on the tracer's
+        engine track — all host-side, around (never inside) the jitted
+        calls.
+        """
+        tr = self.obs.tracer
         events: List[Tuple[int, int]] = []
-        for req, start, n in plan.prefill:
-            events.extend(self._run_prefill_chunk(req, start, n))
-        if plan.decode:
-            events.extend(self._run_decode(plan.decode))
+        with tr.span("engine_step", step=self.steps):
+            with self._m_step_lat.time(phase="schedule"):
+                plan = self.sched.schedule()
+            for req, start, n in plan.prefill:
+                with tr.span("prefill_chunk", rid=req.rid, start=start,
+                             n=n):
+                    with self._m_step_lat.time(phase="prefill"):
+                        events.extend(
+                            self._run_prefill_chunk(req, start, n))
+                self._m_tokens.inc(n, phase="prefill")
+            if plan.decode:
+                with tr.span("decode_batch", slots=len(plan.decode)):
+                    with self._m_step_lat.time(phase="decode"):
+                        events.extend(self._run_decode(plan.decode))
+        self._m_steps.inc()
         self.steps += 1
         return events
 
@@ -157,12 +233,22 @@ class Engine:
         analytically. Stream-level, not per-projection: norm/clipping
         inside each layer shifts per-projection operand sparsity
         (bench_compression.py measures those sites).
+
+        Integer counters read back from the metrics registry (they are
+        incremented at the same sites that used to maintain ad-hoc
+        attributes, so the values are identical); the ``wire_*`` floats
+        stay sourced from the engine's float64 accumulation arrays so
+        summation order — and therefore every historical digit — is
+        unchanged.
         """
+        self._refresh_gauges()
+        r = self.obs.registry
         out = {
-            "steps": self.steps,
-            "pool_pages_free": self.pool.num_free,
-            "pool_utilization": self.pool.utilization(),
-            "pool_evictions": self.pool.evictions,
+            "steps": int(r.value("serving_engine_steps_total")),
+            "pool_pages_free": int(r.value("serving_pool_pages_free")),
+            "pool_utilization": float(
+                r.value("serving_pool_utilization_ratio")),
+            "pool_evictions": int(r.value("serving_pool_evictions_total")),
         }
         if self.layer_wire_bytes is not None and self.wire_tokens:
             wire = float(self.layer_wire_bytes.sum())
@@ -175,17 +261,51 @@ class Engine:
                 self.layer_dense_bytes / self.wire_tokens).tolist()
         return out
 
+    def _refresh_gauges(self) -> None:
+        """Push point-in-time state into the registry gauges. Called on
+        read (``aggregate_stats``/``metrics_snapshot``), not per step, so
+        the hot path never pays for them."""
+        self._g_pool_free.set(self.pool.num_free)
+        self._g_pool_util.set(self.pool.utilization())
+        if self.layer_wire_bytes is not None and self.wire_tokens:
+            per_tok = self.layer_wire_bytes / self.wire_tokens
+            spars = self.layer_sparsity_sum / self.wire_tokens
+            for i in range(per_tok.shape[0]):
+                self._g_layer_wire.set(float(per_tok[i]), layer=str(i))
+                self._g_layer_sparsity.set(float(spars[i]), layer=str(i))
+
+    def metrics_snapshot(self) -> Dict[str, object]:
+        """Refresh gauges and return the full registry snapshot
+        (``repro.obs.MetricsRegistry.snapshot`` schema)."""
+        self._refresh_gauges()
+        return self.obs.registry.snapshot()
+
     def _account_wire(self, req: Request, wire: float, dense: float,
                       layer_wire: np.ndarray, layer_dense: np.ndarray,
+                      layer_spars_weighted: np.ndarray,
                       n_tokens: int) -> None:
+        """Fold one telemetered slab of tokens into the byte accounting.
+
+        ``layer_spars_weighted`` is per-layer MSB sparsity already scaled
+        by ``n_tokens`` so the engine-level accumulator stays a plain
+        token-weighted sum. Draft (LSB4-only) tokens never reach here —
+        they carry no telemetry — so ``wire_tokens`` is exactly the
+        denominator the byte totals were measured over.
+        """
         req.wire_bytes_sum += wire
         req.dense_bytes_sum += dense
+        req.wire_tokens += n_tokens
         if self.layer_wire_bytes is None:
             self.layer_wire_bytes = np.zeros(layer_wire.shape[0], np.float64)
             self.layer_dense_bytes = np.zeros(layer_wire.shape[0], np.float64)
+            self.layer_sparsity_sum = np.zeros(
+                layer_wire.shape[0], np.float64)
         self.layer_wire_bytes += layer_wire
         self.layer_dense_bytes += layer_dense
+        self.layer_sparsity_sum += layer_spars_weighted
         self.wire_tokens += n_tokens
+        self._m_wire.inc(wire)
+        self._m_dense.inc(dense)
 
     # -- internals ---------------------------------------------------------
 
@@ -218,7 +338,11 @@ class Engine:
         now = self._clock()
         if req.t_first is None:
             req.t_first = now
+            self._m_ttft.observe(now - req.arrival)
+        elif req.t_last is not None:
+            self._m_tpot.observe(now - req.t_last)
         req.t_last = now
+        self._m_emitted.inc()
         req.context.append(token)
         req.out_tokens.append(token)
         s = req.sampling
@@ -240,9 +364,10 @@ class Engine:
         req.sparsity_n += n
         layer_wire = np.asarray(tel["layer_wire_bytes"], np.float64)
         layer_dense = np.asarray(tel["layer_dense_bytes"], np.float64)
+        layer_spars = np.asarray(tel["layer_sparsity"], np.float64)
         self._account_wire(req, float(layer_wire.sum()),
                            float(layer_dense.sum()), layer_wire,
-                           layer_dense, n)
+                           layer_dense, layer_spars * n, n)
         if not self.sched.prefill_advanced(req, n):
             return []
         self.sched.to_running(req)
@@ -265,6 +390,7 @@ class Engine:
         sparsity = np.asarray(tel["sparsity"])
         layer_wire = np.asarray(tel["layer_wire_bytes"], np.float64)
         layer_dense = np.asarray(tel["layer_dense_bytes"], np.float64)
+        layer_spars = np.asarray(tel["layer_sparsity"], np.float64)
         events = []
         for req in decode:
             req.sparsity_sum += float(sparsity[req.slot])
@@ -272,8 +398,10 @@ class Engine:
             self._account_wire(
                 req, float(layer_wire[:, req.slot].sum()),
                 float(layer_dense[:, req.slot].sum()),
-                layer_wire[:, req.slot], layer_dense[:, req.slot], 1)
+                layer_wire[:, req.slot], layer_dense[:, req.slot],
+                layer_spars[:, req.slot], 1)
             ev = self._emit(req, self._sample(req, logits[req.slot]))
             if ev:
                 events.append(ev)
+        self._m_tokens.inc(len(decode), phase="decode")
         return events

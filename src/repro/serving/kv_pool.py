@@ -121,7 +121,12 @@ class PagedKVPool:
     """
 
     def __init__(self, cfg: ModelConfig, pool_cfg: PoolConfig,
-                 n_shards: int = 1):
+                 n_shards: int = 1, obs=None):
+        """``obs`` (an ``repro.obs.Observability``) registers the pool's
+        page-accounting metrics — allocation/release/eviction counters —
+        on the owning engine's registry; None (standalone pools, most
+        tests) keeps the pool metric-free. Host-side bookkeeping only:
+        nothing here touches traced code."""
         if n_shards < 1:
             raise ValueError(n_shards)
         if pool_cfg.n_pages % n_shards:
@@ -142,6 +147,20 @@ class PagedKVPool:
         self._owner_shard: Dict[object, int] = {}
         self.evictions = 0
         self.on_evict: Optional[Callable[[object, List[int]], None]] = None
+        if obs is not None:
+            r = obs.registry
+            self._m_evict = r.counter(
+                "serving_pool_evictions_total",
+                "live owners preempted out of their pages", unit="evictions")
+            self._m_alloc = r.counter(
+                "serving_pool_pages_allocated_total",
+                "pages handed to owners", unit="pages")
+            self._m_freed = r.counter(
+                "serving_pool_pages_released_total",
+                "pages returned to the free lists (release/truncate/evict)",
+                unit="pages")
+        else:
+            self._m_evict = self._m_alloc = self._m_freed = None
 
     # -- capacity ----------------------------------------------------------
 
@@ -196,6 +215,8 @@ class PagedKVPool:
         pages = [self._free[shard].popleft() for _ in range(n)]
         self._owned.setdefault(owner, []).extend(pages)
         self._owner_shard[owner] = shard
+        if self._m_alloc is not None:
+            self._m_alloc.inc(n)
         return pages
 
     def release(self, owner) -> List[int]:
@@ -203,6 +224,8 @@ class PagedKVPool:
         pages = self._owned.pop(owner, [])
         shard = self._owner_shard.pop(owner, 0)
         self._free[shard].extend(pages)
+        if pages and self._m_freed is not None:
+            self._m_freed.inc(len(pages))
         return pages
 
     def truncate(self, owner, n_tokens: int) -> List[int]:
@@ -231,6 +254,8 @@ class PagedKVPool:
             del self._owned[owner]
             self._owner_shard.pop(owner, None)
         self._free[shard].extend(tail)
+        if self._m_freed is not None:
+            self._m_freed.inc(len(tail))
         return tail
 
     def evict(self, owner) -> List[int]:
@@ -246,6 +271,8 @@ class PagedKVPool:
         if self.on_evict is not None:
             self.on_evict(owner, pages)
         self.evictions += 1
+        if self._m_evict is not None:
+            self._m_evict.inc()
         return self.release(owner)
 
     # -- telemetry ---------------------------------------------------------

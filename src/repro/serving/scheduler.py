@@ -68,6 +68,8 @@ class Request:
     sparsity_n: int = 0
     wire_bytes_sum: float = 0.0      # measured packed-wire activation bytes
     dense_bytes_sum: float = 0.0     # dense int8 baseline for the same acts
+    wire_tokens: int = 0             # tokens the wire telemetry covered
+    draft_tokens: int = 0            # LSB4-only draft tokens (no telemetry)
     preemptions: int = 0
     # speculative decoding (serving/spec_decode.py)
     draft_proposed: int = 0          # LSB4-only drafts the verifier judged
@@ -88,6 +90,20 @@ class Request:
         return self.status == FINISHED
 
     def stats(self) -> dict:
+        """Per-request serving statistics (NaN where undefined — e.g. a
+        request that never emitted a token has no TTFT/TPOT, a request
+        with no telemetered steps has no wire accounting).
+
+        Wire-format semantics: ``act_wire_bytes_per_token`` divides the
+        measured packed-wire bytes by ``wire_tokens`` — the tokens whose
+        activations the telemetry actually covered (prefill chunks,
+        full decode steps, and speculative *verify* windows). The γ
+        LSB4-only draft steps per speculative cycle run with telemetry
+        statically elided (they execute γ times per emitted batch), so
+        their tokens are counted separately in ``draft_tokens`` and are
+        deliberately EXCLUDED from the wire denominator: mixing them in
+        would silently understate bytes/token by up to (2γ+1)/(γ+1)x.
+        """
         ttft = (self.t_first - self.arrival
                 if self.t_first is not None else float("nan"))
         if self.t_first is not None and self.n_generated > 1:
@@ -102,10 +118,13 @@ class Request:
                              if self.sparsity_n else float("nan")),
             # measured wire-format accounting of this request's
             # inter-layer hidden activation stream (summed over layers
-            # and processed tokens; see layers.act_wire_telemetry)
+            # and TELEMETERED tokens; see layers.act_wire_telemetry and
+            # the docstring above for the speculative-draft exclusion)
             "act_wire_bytes_per_token": (
-                self.wire_bytes_sum / self.sparsity_n
-                if self.sparsity_n else float("nan")),
+                self.wire_bytes_sum / self.wire_tokens
+                if self.wire_tokens else float("nan")),
+            "wire_tokens": self.wire_tokens,
+            "draft_tokens": self.draft_tokens,
             "act_wire_compression_pct": (
                 (1.0 - self.wire_bytes_sum / self.dense_bytes_sum) * 100.0
                 if self.dense_bytes_sum else float("nan")),
@@ -133,9 +152,35 @@ class StepPlan:
 
 
 class Scheduler:
-    def __init__(self, pool: PagedKVPool, cfg: SchedulerConfig):
+    def __init__(self, pool: PagedKVPool, cfg: SchedulerConfig, obs=None):
+        """``obs`` (``repro.obs.Observability``, usually the owning
+        engine's) makes the scheduler observable: queue-depth/running-slot
+        gauges and admission/preemption counters on the registry, plus
+        per-request lifecycle spans (waiting → prefill → decode, with
+        preemption gaps as renewed waiting spans) on a per-request tracer
+        track — the timeline ``serve.py --trace-out`` exports. All
+        host-side; None disables everything."""
         self.pool = pool
         self.cfg = cfg
+        self.obs = obs
+        if obs is not None:
+            r = obs.registry
+            self._m_submitted = r.counter(
+                "serving_requests_submitted_total", "requests accepted by "
+                "submit()", unit="requests")
+            self._m_finished = r.counter(
+                "serving_requests_finished_total", "requests that reached "
+                "FINISHED", unit="requests")
+            self._m_preempted = r.counter(
+                "serving_preemptions_total", "recompute-style preemptions "
+                "(pages evicted, request re-queued)", unit="preemptions")
+            self._m_queue = r.gauge(
+                "serving_queue_depth", "waiting requests after the last "
+                "schedule()", unit="requests")
+            self._m_running = r.gauge(
+                "serving_running_slots", "decode slots occupied after the "
+                "last schedule()", unit="slots")
+        self._phase_spans: dict = {}
         self.waiting: collections.deque[Request] = collections.deque()
         self.running: List[Request] = []
         self._free_slots = list(range(cfg.max_decode_batch))
@@ -158,6 +203,25 @@ class Scheduler:
         if self.pool.n_shards == 1 or req.slot is None:
             return 0
         return req.slot // self._slots_per_shard
+
+    # -- observability -----------------------------------------------------
+
+    def _lifecycle(self, req: Request, phase: Optional[str],
+                   **args) -> None:
+        """Close the request's open lifecycle span and (unless ``phase``
+        is None) open the next one on its per-request trace track. One
+        span per request is open at any time, so the exported timeline is
+        a gap-free tiling of waiting/prefill/decode phases — a preemption
+        shows up as a fresh ``waiting`` span with ``preempted=True``."""
+        if self.obs is None:
+            return
+        tr = self.obs.tracer
+        tr.end(self._phase_spans.pop(req.rid, None))
+        if phase is not None:
+            from repro.obs import REQUEST_TRACK_BASE
+            self._phase_spans[req.rid] = tr.begin(
+                phase, track=REQUEST_TRACK_BASE + req.rid, rid=req.rid,
+                **args)
 
     # -- intake ------------------------------------------------------------
 
@@ -187,6 +251,12 @@ class Scheduler:
         req = Request(rid=next(self._rid), prompt=list(prompt),
                       sampling=sampling, arrival=arrival)
         self.waiting.append(req)
+        if self.obs is not None:
+            self._m_submitted.inc()
+            from repro.obs import REQUEST_TRACK_BASE
+            self.obs.tracer.set_track_name(REQUEST_TRACK_BASE + req.rid,
+                                           f"request {req.rid}")
+            self._lifecycle(req, WAITING)
         return req
 
     def has_work(self) -> bool:
@@ -204,6 +274,7 @@ class Scheduler:
             self.waiting.remove(req)
         req.status = RUNNING
         self.running.append(req)
+        self._lifecycle(req, "decode", slot=req.slot)
 
     def finish(self, req: Request) -> None:
         req.status = FINISHED
@@ -215,6 +286,14 @@ class Scheduler:
             self._free_slots.append(req.slot)
             req.slot = None
         self.pool.release(req.rid)
+        self._lifecycle(req, None)
+        if self.obs is not None:
+            self._m_finished.inc()
+            from repro.obs import REQUEST_TRACK_BASE
+            self.obs.tracer.instant("finished",
+                                    track=REQUEST_TRACK_BASE + req.rid,
+                                    rid=req.rid,
+                                    n_generated=req.n_generated)
 
     def preempt(self, req: Request) -> None:
         """Recompute-style preemption: evict pages, fold generated tokens
@@ -227,6 +306,9 @@ class Scheduler:
         if req in self.waiting:
             self.waiting.remove(req)
         req.status = WAITING
+        if self.obs is not None:
+            self._m_preempted.inc()
+        self._lifecycle(req, WAITING, preempted=True)
         # re-enter in arrival order so FCFS priority survives preemption
         idx = next((i for i, r in enumerate(self.waiting)
                     if (r.arrival, r.rid) > (req.arrival, req.rid)),
@@ -304,6 +386,8 @@ class Scheduler:
                 if self.pool.allocate(need - have, req.rid,
                                       shard=self._shard(req)) is None:
                     break                 # pool pressure: wait for frees
+            if req.status != PREFILL:
+                self._lifecycle(req, PREFILL, slot=req.slot)
             req.status = PREFILL
             plan.prefill.append((req, req.prefilled, chunk))
             budget -= chunk
@@ -329,4 +413,7 @@ class Scheduler:
                 return self.schedule()
             raise RuntimeError(
                 "scheduler gridlock: pool too small for the waiting work")
+        if self.obs is not None:
+            self._m_queue.set(len(self.waiting))
+            self._m_running.set(len(self.running))
         return plan

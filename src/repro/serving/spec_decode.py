@@ -34,6 +34,15 @@ tokens per scheduler step and writes K/V up to γ positions ahead, which
 ``SchedulerConfig.decode_tokens_per_slot`` / ``decode_lookahead`` feed
 into the scheduler's token budget, page growth and admission checks.
 
+Telemetry semantics: the γ draft steps run the LSB4-only jitted step
+compiled ``with_telemetry=False`` — they carry NO wire-byte or sparsity
+telemetry, by design (telemetry reductions would erase most of the
+draft's latency win). Only the verify window's γ+1 tokens enter the
+wire-byte accounting, so ``Request.wire_tokens`` counts telemetered
+tokens and ``Request.draft_tokens`` counts the untelemetered draft
+compute tokens separately. Folding drafts into the wire denominator
+would understate bytes/token by up to (2γ+1)/(γ+1)× — keep them apart.
+
     eng = SpeculativeEngine(cfg, qparams, spec=SpecConfig(gamma=3))
     h = eng.submit(prompt, SamplingParams(max_new_tokens=32))
     eng.run()
@@ -86,7 +95,7 @@ class SpeculativeEngine(Engine):
                  pool_config: Optional[PoolConfig] = None,
                  sched_config: Optional[SchedulerConfig] = None,
                  spec: SpecConfig = SpecConfig(),
-                 clock=time.monotonic, mesh=None):
+                 clock=time.monotonic, mesh=None, obs=None):
         from repro.launch import steps as S
         self.spec = spec
         g = spec.gamma
@@ -95,7 +104,8 @@ class SpeculativeEngine(Engine):
             decode_tokens_per_slot=2 * g + 1,   # γ draft + (γ+1) verify
             decode_lookahead=g)
         super().__init__(cfg, params, pool_config=pool_config,
-                         sched_config=sched_config, clock=clock, mesh=mesh)
+                         sched_config=sched_config, clock=clock, mesh=mesh,
+                         obs=obs)
         # draft/verify share the engine's mesh layout (self.mesh is None
         # when no multi-device mesh was given): the LSB4-only draft and
         # the batched verify run inside the same shard_map partitioning
@@ -118,6 +128,19 @@ class SpeculativeEngine(Engine):
         self.draft_accepted_total = 0
         self.spec_steps_total = 0
         self.spec_emitted_total = 0
+        r = self.obs.registry
+        self._m_spec_proposed = r.counter(
+            "serving_spec_draft_proposed_total", "draft tokens the "
+            "verifier examined", unit="tokens")
+        self._m_spec_accepted = r.counter(
+            "serving_spec_draft_accepted_total", "examined draft tokens "
+            "the full-precision model accepted", unit="tokens")
+        self._m_spec_cycles = r.counter(
+            "serving_spec_cycles_total", "draft+verify cycles run (one "
+            "per decode slot per engine step)", unit="steps")
+        self._m_spec_emitted = r.counter(
+            "serving_spec_tokens_emitted_total", "tokens emitted by "
+            "accept/correct/bonus across all cycles", unit="tokens")
 
     # -- decode path -------------------------------------------------------
 
@@ -138,37 +161,50 @@ class SpeculativeEngine(Engine):
         jtables = jnp.asarray(tables)
         cur = jnp.asarray(token)
         dlogs = []
-        for i in range(g):
-            dlg, self.pool.state, _ = self._draft_fn(
-                self.params, self.pool.state, cur,
-                jpos + jnp.int32(i), jtables)
-            dlg = np.asarray(dlg)
-            dlogs.append(dlg)
-            nxt = np.zeros((B,), np.int32)
-            for req in decode:
-                nxt[req.slot] = self._sample(req, dlg[req.slot])
-            window[:, i + 1] = nxt
-            cur = jnp.asarray(nxt)
+        with self.obs.tracer.span("spec_draft", slots=len(decode),
+                                  gamma=g):
+            with self._m_step_lat.time(phase="draft"):
+                for i in range(g):
+                    dlg, self.pool.state, _ = self._draft_fn(
+                        self.params, self.pool.state, cur,
+                        jpos + jnp.int32(i), jtables)
+                    dlg = np.asarray(dlg)
+                    dlogs.append(dlg)
+                    nxt = np.zeros((B,), np.int32)
+                    for req in decode:
+                        nxt[req.slot] = self._sample(req, dlg[req.slot])
+                    window[:, i + 1] = nxt
+                    cur = jnp.asarray(nxt)
         draft_logits = np.stack(dlogs, axis=1)          # (B, γ, V)
+        self._m_tokens.inc(len(decode) * g, phase="draft")
 
         # ---- verify: one full-precision batched window step ----
-        vlg, self.pool.state, tel = self._verify_fn(
-            self.params, self.pool.state, jnp.asarray(window), jpos,
-            jtables)
-        vlg = np.asarray(vlg)                           # (B, γ+1, V)
+        with self.obs.tracer.span("spec_verify", slots=len(decode),
+                                  window=g + 1):
+            with self._m_step_lat.time(phase="verify"):
+                vlg, self.pool.state, tel = self._verify_fn(
+                    self.params, self.pool.state, jnp.asarray(window),
+                    jpos, jtables)
+                vlg = np.asarray(vlg)                   # (B, γ+1, V)
+        self._m_tokens.inc(len(decode) * (g + 1), phase="verify")
         sparsity = np.asarray(tel["sparsity"])
         layer_wire = np.asarray(tel["layer_wire_bytes"], np.float64)
         layer_dense = np.asarray(tel["layer_dense_bytes"], np.float64)
+        layer_spars = np.asarray(tel["layer_sparsity"], np.float64)
 
         events: List[Tuple[int, int]] = []
         for req in decode:
             s = req.slot
             req.sparsity_sum += float(sparsity[s]) * (g + 1)
             req.sparsity_n += g + 1
+            # γ draft compute tokens ran telemetry-free (module
+            # docstring) — tracked apart from the wire denominator
+            req.draft_tokens += g
             self._account_wire(
                 req, float(layer_wire[:, s].sum()),
                 float(layer_dense[:, s].sum()),
-                layer_wire[:, s], layer_dense[:, s], g + 1)
+                layer_wire[:, s], layer_dense[:, s],
+                layer_spars[:, s] * (g + 1), g + 1)
             events.extend(
                 self._accept_and_emit(req, window[s], vlg[s],
                                       draft_logits[s]))
@@ -266,17 +302,24 @@ class SpeculativeEngine(Engine):
         self.draft_accepted_total += accepted
         self.spec_steps_total += 1
         self.spec_emitted_total += emitted
+        self._m_spec_proposed.inc(examined)
+        self._m_spec_accepted.inc(accepted)
+        self._m_spec_cycles.inc()
+        self._m_spec_emitted.inc(emitted)
         return events
 
     # -- telemetry ---------------------------------------------------------
 
     def aggregate_stats(self) -> dict:
         out = super().aggregate_stats()
+        r = self.obs.registry
+        proposed = int(r.value("serving_spec_draft_proposed_total"))
+        accepted = int(r.value("serving_spec_draft_accepted_total"))
+        cycles = int(r.value("serving_spec_cycles_total"))
+        emitted = int(r.value("serving_spec_tokens_emitted_total"))
         out["spec_gamma"] = self.spec.gamma
-        if self.draft_proposed_total:
-            out["spec_acceptance_rate"] = (self.draft_accepted_total
-                                           / self.draft_proposed_total)
-        if self.spec_steps_total:
-            out["spec_tokens_per_step"] = (self.spec_emitted_total
-                                           / self.spec_steps_total)
+        if proposed:
+            out["spec_acceptance_rate"] = accepted / proposed
+        if cycles:
+            out["spec_tokens_per_step"] = emitted / cycles
         return out
