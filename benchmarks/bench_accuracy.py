@@ -10,7 +10,6 @@ global calibration sweep picks sane constants.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from benchmarks.common import (BENCH_DATA, eval_ppl, probe_linear_inputs,

@@ -10,7 +10,6 @@ that search.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import itertools
 from typing import Dict
 

@@ -18,8 +18,7 @@ import jax.numpy as jnp
 from repro.core.clipping import (apply_clipping, importance_mask,
                                  importance_mask_tile_aligned)
 from repro.core.sparqle import (encode, ops_reduction_percent,
-                                subprecision_sparsity, tile_population,
-                                tile_sparsity)
+                                subprecision_sparsity, tile_sparsity)
 from repro.kernels.ops import dense_quant_linear, sparqle_linear
 from repro.core.quantize import quantize_weights
 

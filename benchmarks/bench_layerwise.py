@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import BENCH_DATA, probe_linear_inputs, \
     trained_smoke_model
-from repro.core.costmodel import (HardwareConfig, LMShape, LinearShape,
+from repro.core.costmodel import (HardwareConfig, LinearShape,
                                   linear_cost)
 from repro.core.sparqle import subprecision_sparsity
 from repro.data.pipeline import SyntheticLM

@@ -45,6 +45,12 @@ def provenance_meta(cfg: ModelConfig = None) -> Dict[str, str]:
     except (OSError, subprocess.SubprocessError):
         sha = ""
     out = {"git_sha": sha or "unknown", "jax_version": jax.__version__}
+    try:
+        from repro.analysis import VERSION as _an_version, ruleset_hash
+        out["analyzer_version"] = _an_version
+        out["analyzer_ruleset"] = ruleset_hash()
+    except ImportError:
+        pass
     if cfg is not None:
         blob = _json.dumps(dataclasses.asdict(cfg), sort_keys=True,
                            default=str)

@@ -1,0 +1,57 @@
+"""Static invariant checking for the SPARQLe serving stack.
+
+Two layers (see docs/static-analysis.md for the full rule catalog):
+
+* **sparqlint** (`astlint.py`) — AST rules over ``src/``: host-side
+  effects must not be reachable from traced code, host-only modules must
+  not launch device ops, tracer-leak heuristics, metric registration
+  discipline.
+* **jaxpr contract checker** (`jaxprcheck.py`) — traces the *real*
+  engine step functions from ``launch/steps.py`` on tiny configs
+  (without executing them) and walks the ClosedJaxpr to verify the
+  representation contracts: one int32 psum per row-parallel linear, no
+  un-allowlisted collectives, int32 accumulator dtype discipline, full
+  MSB-plane elision under ``msb_skip``, and no host callbacks inside
+  serving steps.
+
+CLI: ``python -m repro.analysis --check`` (wired into CI's
+``invariants`` job). Intentionally-kept violations live in
+``allowlist.txt`` next to this file, each with a reason string.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+
+VERSION = "1.0.0"
+
+# Rule catalog: ID -> one-line contract statement. The ruleset hash is
+# derived from this mapping (plus VERSION), so adding/changing a rule
+# changes the hash stamped into bench provenance.
+RULES = {
+    "SPL001": "no host side effects (print/time/obs registry/tracer) in "
+              "functions reachable from jitted, shard_map'd or "
+              "pallas_call'd code",
+    "SPL002": "no jax.numpy/lax device ops in host-only modules "
+              "(serving/scheduler.py, serving/kv_pool.py, obs/)",
+    "SPL003": "no tracer-leak patterns (.item()/float()/int()/bool() or "
+              "Python control flow on traced values) inside step bodies",
+    "SPL004": "metric names registered via MetricsRegistry must be "
+              "well-formed and cataloged in docs/observability.md",
+    "JXP001": "serving step jaxprs contain no collectives outside the "
+              "committed allowlist",
+    "JXP002": "exactly one int32 psum over the model axis per "
+              "row-parallel linear, paired 1:1 with the f32 pmax scale",
+    "JXP003": "int32 accumulator untouched by float ops between the int8 "
+              "plane matmuls and the rescale convert",
+    "JXP004": "msb_skip draft jaxprs contain no MSB-plane matmuls "
+              "(int32 dot count halves exactly; no shift-fed dots)",
+    "JXP005": "no pure_callback/io_callback/debug_callback/debug.print "
+              "inside any serving step jaxpr",
+}
+
+
+def ruleset_hash() -> str:
+    """Stable 16-hex digest of the active rule set + analyzer version."""
+    blob = json.dumps({"version": VERSION, "rules": RULES}, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]

@@ -1,0 +1,96 @@
+"""CLI: ``python -m repro.analysis [--check] [--report out.json]``.
+
+Runs both analysis layers and prints every finding. ``--check`` exits
+non-zero when any non-allowlisted finding remains (the CI gate).
+
+The jaxpr layer needs >= 4 devices to trace the 2x2-mesh step variants,
+so when XLA_FLAGS doesn't already force a host device count this module
+injects ``--xla_force_host_platform_device_count=4`` *before* jax
+initializes its backends — which is why the heavy imports below are
+deferred until after the environment is set up.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="SPARQLe invariant checker (AST lint + jaxpr "
+                    "contract verification)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if any non-allowlisted finding remains")
+    ap.add_argument("--report", metavar="PATH",
+                    help="write a JSON findings report")
+    ap.add_argument("--no-jaxpr", action="store_true",
+                    help="skip the jaxpr layer (AST rules only; no jax "
+                         "import)")
+    ap.add_argument("--no-mesh", action="store_true",
+                    help="skip the mesh-sharded step traces")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="host device count to force for mesh traces "
+                         "(default 4; ignored if XLA_FLAGS already "
+                         "forces one)")
+    args = ap.parse_args(argv)
+
+    if not args.no_jaxpr and not args.no_mesh and \
+            "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    from . import VERSION, ruleset_hash
+    from .findings import Allowlist, apply_allowlist
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    repo_root = os.path.abspath(os.path.join(here, "..", "..", ".."))
+    src_root = os.path.join(repo_root, "src")
+    docs = os.path.join(repo_root, "docs", "observability.md")
+
+    from . import astlint
+    findings = astlint.run(src_root, docs_path=docs)
+    if not args.no_jaxpr:
+        from . import jaxprcheck
+        findings += jaxprcheck.run(
+            with_mesh=False if args.no_mesh else None)
+
+    allowlist = Allowlist.load()
+    active, allowed = apply_allowlist(findings, allowlist)
+
+    for f in active:
+        print(f.render())
+    print(f"repro.analysis v{VERSION} (ruleset {ruleset_hash()}): "
+          f"{len(active)} finding(s), {len(allowed)} allowlisted")
+    stale = allowlist.stale_entries()
+    if args.no_jaxpr:  # JXP entries can't match when the layer is skipped
+        stale = [e for e in stale if not e.rule_id.startswith("JXP")]
+    for e in stale:
+        print(f"warning: stale allowlist entry (matched nothing): "
+              f"{allowlist.path}:{e.line_no} {e.rule_id} {e.pattern}")
+
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump({
+                "version": VERSION,
+                "ruleset_hash": ruleset_hash(),
+                "findings": [x.as_dict() for x in active],
+                "allowlisted": [x.as_dict() for x in allowed],
+                "stale_allowlist_entries": [
+                    {"rule_id": e.rule_id, "pattern": e.pattern,
+                     "reason": e.reason, "line": e.line_no}
+                    for e in stale],
+            }, f, indent=2)
+        print(f"report written to {args.report}")
+
+    return 1 if (args.check and active) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,7 +19,6 @@ the MSB4==0 range is exactly [LP_LOW, LP_HIGH] = [0, 15].
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable, Dict, Tuple
 
 import jax

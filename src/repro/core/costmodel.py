@@ -27,8 +27,7 @@ committed defaults are the best fit (see EXPERIMENTS.md §Cost-model).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 
 @dataclasses.dataclass

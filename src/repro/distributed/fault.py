@@ -30,8 +30,6 @@ import threading
 import time
 from typing import Any, Callable, Dict, Optional
 
-import jax
-
 from repro.checkpoint import store
 
 

@@ -24,7 +24,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.packing import pack_nibbles
@@ -104,7 +103,6 @@ def sparqle_linear(
     k_in = orig[-1]
     n_out = w.q.shape[-1]
     x2 = x.reshape(-1, k_in)
-    m = x2.shape[0]
 
     qa = quantize_activations(x2, bits=8, per_token=True)
     q = qa.q

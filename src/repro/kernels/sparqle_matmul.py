@@ -39,7 +39,6 @@ population count from ``core.sparqle.tile_population`` — is delivered as a
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

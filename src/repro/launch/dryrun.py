@@ -26,14 +26,12 @@ Usage::
 """
 import argparse
 import json
-import re
 import time
 import traceback
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs.base import SHAPES
 from repro.distributed.sharding import mesh_context, spec_for

@@ -25,15 +25,14 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 
 from repro.configs.base import ModelConfig
-from repro.distributed.sharding import constrain, spec_for
+from repro.distributed.sharding import spec_for
 from repro.models import model as M
 from repro.models.qschema import (build_quantized_schema, tree_abstract,
                                   tree_shardings)
 from repro.models.registry import cache_schema
 from repro.models.schema import ParamSpec, Schema
 from repro.models.schema_builder import build_schema
-from repro.optim.adamw import (OptConfig, OptState, adamw_update,
-                               init_opt_state)
+from repro.optim.adamw import OptConfig, OptState, adamw_update
 
 
 @dataclasses.dataclass(frozen=True)

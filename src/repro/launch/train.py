@@ -20,10 +20,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.data.pipeline import DataConfig, SyntheticLM, shard_batch
+from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.distributed.fault import FaultInjector, RestartableLoop
 from repro.distributed.sharding import mesh_context
 from repro.checkpoint import store

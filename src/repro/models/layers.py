@@ -13,7 +13,6 @@ local/global flag just widens the window dynamically.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax

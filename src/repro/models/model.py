@@ -210,7 +210,6 @@ def mla_full(cfg: ModelConfig, ld: LayerDef, p: Params, x: jax.Array,
     b, s, d = x.shape
     H = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
-    rkv = cfg.kv_lora_rank
     h = _norm(cfg, p["ln"], x)
     qn, qr = _mla_q(cfg, p, h, positions)          # (B,S,H,dn/dr)
     ckv, kr = _mla_ckv(cfg, p, h, positions)       # (B,S,rkv) / (B,S,dr)

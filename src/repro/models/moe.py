@@ -13,7 +13,7 @@ normalized top-k (deepseek-v3), plus always-on shared experts.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.qlinear import expert_linear, linear
-from repro.distributed.sharding import active_mesh, constrain, mesh_context
+from repro.distributed.sharding import active_mesh, constrain
 
 
 def router(x: jax.Array, w_router: jax.Array, router_type: str,

@@ -9,7 +9,6 @@ of truth for the dry-run and EXPERIMENTS.md.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

@@ -8,13 +8,9 @@ tree quantizes into SPARQLe served form with zero model-code changes.
 """
 from __future__ import annotations
 
-from typing import Dict
-
-import jax.numpy as jnp
-
 from repro.configs.base import ModelConfig
 from repro.models.schema import ParamSpec, Schema
-from repro.models.stages import LayerDef, Stage, build_stages
+from repro.models.stages import LayerDef, build_stages
 
 
 def _norm_schema(cfg: ModelConfig, dim: int) -> Schema:

@@ -15,7 +15,7 @@ depth while supporting heterogeneous interleaves exactly:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List
 
 from repro.configs.base import ModelConfig
 

@@ -31,8 +31,8 @@ from repro.configs.base import ModelConfig
 from repro.models.model import check_paged_support
 from repro.obs import Observability
 from repro.serving.kv_pool import PagedKVPool, PoolConfig
-from repro.serving.scheduler import (FINISHED, Request, SamplingParams,
-                                     Scheduler, SchedulerConfig)
+from repro.serving.scheduler import (Request, SamplingParams, Scheduler,
+                                     SchedulerConfig)
 
 
 class Engine:

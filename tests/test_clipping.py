@@ -8,7 +8,7 @@ try:
 except ModuleNotFoundError:      # degrade to seeded fixed examples
     from _hypothesis_fallback import given, settings, st
 
-from repro.core.clipping import (apply_clipping, clip_fraction,
+from repro.core.clipping import (apply_clipping,
                                  column_importance, enhanced_sparsity,
                                  global_calibrate, importance_mask,
                                  importance_mask_tile_aligned,

@@ -11,8 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.hlo_analysis import (analyze, parse_hlo, shape_bytes,
-                                       shape_dims)
+from repro.launch.hlo_analysis import analyze, shape_bytes, shape_dims
 
 
 def _run_subprocess(code: str, devices: int = 8) -> str:
@@ -180,7 +179,6 @@ def test_analyzer_parses_real_artifact():
 def test_profile_rules_decisions():
     from repro.distributed.sharding import profile_rules
     from repro.models.registry import ARCHS
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
 
     class FakeMesh:
         shape = {"data": 16, "model": 16}

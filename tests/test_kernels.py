@@ -13,9 +13,9 @@ except ModuleNotFoundError:      # degrade to seeded fixed examples
     from _hypothesis_fallback import given, settings, st
 
 from repro.core import packing as packing_lib
-from repro.core.quantize import quantize_activations, quantize_weights
+from repro.core.quantize import quantize_weights
 from repro.core.sparqle import encode, tile_population
-from repro.kernels.ops import dense_quant_linear, sparqle_linear
+from repro.kernels.ops import sparqle_linear
 from repro.kernels.quant_matmul import quant_matmul
 from repro.kernels.ref import (quant_matmul_ref, sparqle_encode_ref,
                                sparqle_matmul_ref)

@@ -11,7 +11,7 @@ from repro.configs.base import ModelConfig
 from repro.core.qlinear import quantize_model_params
 from repro.launch import steps as S
 from repro.models import model as M
-from repro.models.registry import ARCHS, SMOKES, cell_plan, describe
+from repro.models.registry import ARCHS, SMOKES, cell_plan
 from repro.models.schema import init_params, param_count
 from repro.models.schema_builder import build_schema
 from repro.optim.adamw import OptConfig, init_opt_state

@@ -181,8 +181,6 @@ def test_restartable_loop_recovers(tmp_path):
 
 
 def test_restartable_loop_budget_exhausted(tmp_path):
-    inj = FaultInjector(plan={})
-
     def bad_step(state, batch):
         raise StepFault("always")
 
