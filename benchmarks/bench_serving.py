@@ -153,17 +153,22 @@ def _drive(eng, trace):
     return handles, time.monotonic() - t0
 
 
-def _make_engine(cfg, qparams, spec_gamma: int, mesh=None):
+def _make_engine(cfg, qparams, spec_gamma: int, mesh=None, slos=None):
     pool = PoolConfig(n_pages=48, page_size=16)
     sched = SchedulerConfig(max_decode_batch=8, token_budget=96,
                             prefill_chunk=32, max_pages_per_seq=8)
     if spec_gamma > 0:
-        return SpeculativeEngine(cfg, qparams, pool_config=pool,
-                                 sched_config=sched,
-                                 spec=SpecConfig(gamma=spec_gamma),
-                                 mesh=mesh)
-    return Engine(cfg, qparams, pool_config=pool, sched_config=sched,
-                  mesh=mesh)
+        eng = SpeculativeEngine(cfg, qparams, pool_config=pool,
+                                sched_config=sched,
+                                spec=SpecConfig(gamma=spec_gamma),
+                                mesh=mesh, slos=slos)
+    else:
+        eng = Engine(cfg, qparams, pool_config=pool, sched_config=sched,
+                     mesh=mesh, slos=slos)
+    # attribute at warm-up, before the driven trace: the compiled-HLO
+    # costs feed the roofline/drift joins that _report reads back
+    eng.attribute_steps()
+    return eng
 
 
 def _report(emit, prefix, handles, wall, eng):
@@ -204,12 +209,46 @@ def _report(emit, prefix, handles, wall, eng):
     emit(f"{prefix}/engine_steps", agg["steps"], "continuous-batching steps")
     emit(f"{prefix}/pool_evictions", agg["pool_evictions"],
          "preemptions under page pressure")
+    # compiled-HLO attribution joined with measured step times
+    # (aggregate_stats above refreshed the gauges, so these are current)
+    if eng._attr is not None:
+        for phase in eng._attr.phases():
+            emit(f"{prefix}/attr_{phase}_flops_per_step",
+                 r.value("serving_step_attr_flops", phase=phase),
+                 "dot FLOPs per engine step, compiled HLO")
+            emit(f"{prefix}/attr_{phase}_hbm_bytes_per_step",
+                 r.value("serving_step_attr_hbm_bytes", phase=phase),
+                 "operand+result bytes per engine step, compiled HLO")
+            emit(f"{prefix}/roofline_{phase}_compute_util",
+                 r.value("serving_roofline_compute_util_ratio",
+                         phase=phase),
+                 "achieved FLOP/s vs HardwareConfig.peak_flops")
+            emit(f"{prefix}/roofline_{phase}_memory_util",
+                 r.value("serving_roofline_memory_util_ratio",
+                         phase=phase),
+                 "achieved HBM bytes/s vs HardwareConfig.hbm_bw")
+            emit(f"{prefix}/drift_{phase}_latency_ratio",
+                 r.value("serving_costmodel_latency_drift_ratio",
+                         phase=phase),
+                 "measured step s / costmodel.phase_cost prediction")
+        emit(f"{prefix}/drift_wire_ratio",
+             r.value("serving_costmodel_wire_drift_ratio"),
+             "measured wire bytes/token / Eq.1 prediction (~1.0)")
+    if eng.slo is not None:
+        emit(f"{prefix}/slo_violations",
+             sum(eng.slo.violations().values()),
+             "edge-triggered SLO violation events across all SLOs")
     return float(tpot.mean() * 1e3) if len(tpot) else float("nan")
 
 
 def run(emit, n_requests: int = 8, rate_hz: float = 2.0, seed: int = 0,
-        spec_gamma: int = 0, mesh=None):
-    """Run the bench; returns {prefix: engine} for artifact export."""
+        spec_gamma: int = 0, mesh=None, slos=None):
+    """Run the bench; returns {prefix: engine} for artifact export.
+
+    ``slos`` — list of ``repro.obs.slo.SLO``; every engine gets its own
+    monitor (fresh windows), and each prefix reports its violation
+    count. SLO objects are stateless declarations, safe to share.
+    """
     cfg = BENCH_CFG
     params = draft_friendly_params(cfg, seed=seed)
     qparams = quantize_model_params(
@@ -218,7 +257,7 @@ def run(emit, n_requests: int = 8, rate_hz: float = 2.0, seed: int = 0,
     trace = _poisson_trace(np.random.default_rng(seed), n_requests, rate_hz)
 
     engines = {}
-    eng = _make_engine(cfg, qparams, 0)
+    eng = _make_engine(cfg, qparams, 0, slos=slos)
     engines["serving"] = eng
     handles, wall = _drive(eng, trace)
     base_tpot = _report(emit, "serving", handles, wall, eng)
@@ -227,7 +266,7 @@ def run(emit, n_requests: int = 8, rate_hz: float = 2.0, seed: int = 0,
     if mesh is not None:
         from repro.launch.mesh import make_smoke_mesh
         jmesh = make_smoke_mesh(data=mesh[0], model=mesh[1])
-        meng = _make_engine(cfg, qparams, 0, mesh=jmesh)
+        meng = _make_engine(cfg, qparams, 0, mesh=jmesh, slos=slos)
         engines["serving_mesh"] = meng
         mesh_handles, mesh_wall = _drive(meng, trace)
         _report(emit, "serving_mesh", mesh_handles, mesh_wall, meng)
@@ -239,7 +278,8 @@ def run(emit, n_requests: int = 8, rate_hz: float = 2.0, seed: int = 0,
 
     if spec_gamma <= 0:
         return engines
-    spec_eng = _make_engine(cfg, qparams, spec_gamma, mesh=jmesh)
+    spec_eng = _make_engine(cfg, qparams, spec_gamma, mesh=jmesh,
+                            slos=slos)
     engines["serving_spec"] = spec_eng
     spec_handles, spec_wall = _drive(spec_eng, trace)
     agg = spec_eng.aggregate_stats()
@@ -277,6 +317,17 @@ def main() -> None:
                          "matches the single-device engine (needs "
                          "data*model jax devices; on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--slo", default="",
+                    help="comma-separated SLO specs watched by every "
+                         "engine (e.g. 'ttft:p95<5,queue_depth:p50<16'); "
+                         "each prefix reports its violation count as "
+                         "<prefix>/slo_violations")
+    ap.add_argument("--slo-fail", action="store_true",
+                    help="exit nonzero if any SLO fired on any engine")
+    ap.add_argument("--history", default="",
+                    help="append this run's provenance-stamped result to "
+                         "the given perf-history JSONL (benchmarks/"
+                         "perf_history.py schema)")
     ap.add_argument("--json", default="",
                     help="also write {meta, metrics} to this path — the "
                          "machine-readable result the CI regression gate "
@@ -300,8 +351,22 @@ def main() -> None:
         records[name] = float(value)
         print(f"{name},{value:.6g},{desc}", flush=True)
 
+    from repro.obs.slo import parse_slo_list
+    slos = parse_slo_list(args.slo)
+
     engines = run(emit, n_requests=args.requests, rate_hz=args.rate,
-                  seed=args.seed, spec_gamma=args.spec_gamma, mesh=mesh)
+                  seed=args.seed, spec_gamma=args.spec_gamma, mesh=mesh,
+                  slos=slos)
+
+    for pfx, eng in engines.items():
+        if eng.slo is None:
+            continue
+        for rep in eng.slo.report():
+            state = "VIOLATING" if rep["violating"] else "ok"
+            print(f"# {pfx} SLO {rep['slo']}: p{rep['percentile']:g} = "
+                  f"{rep['value']:.4g} {rep['unit']} (target "
+                  f"{rep['target']:g}) [{state}], "
+                  f"{rep['violations']} violation(s)", flush=True)
 
     # stream-match metrics are hard invariants, not observations: the CI
     # smoke steps rely on a nonzero exit when equivalence breaks
@@ -309,20 +374,27 @@ def main() -> None:
               if k.endswith(("tokens_match_baseline",
                              "tokens_match_single_device")) and v != 1.0]
 
-    if args.json:
+    payload = None
+    if args.json or args.history:
         from benchmarks.common import provenance_meta
         payload = {
             "meta": {"bench": "bench_serving", "config": BENCH_CFG.name,
                      "requests": args.requests, "rate_hz": args.rate,
                      "seed": args.seed, "spec_gamma": args.spec_gamma,
                      "mesh": list(mesh) if mesh else None,
+                     "slo": args.slo or None,
                      **provenance_meta(BENCH_CFG)},
             "metrics": records,
         }
+    if args.json:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"wrote {args.json}", flush=True)
+    if args.history:
+        from benchmarks.perf_history import append_record
+        append_record(args.history, payload)
+        print(f"appended to {args.history}", flush=True)
 
     if args.metrics_out:
         snaps = {pfx: eng.metrics_snapshot()
@@ -337,6 +409,13 @@ def main() -> None:
 
     if broken:
         raise SystemExit(f"token-stream equivalence FAILED: {broken}")
+    if args.slo_fail:
+        fired = {pfx: eng.slo.violations()
+                 for pfx, eng in engines.items()
+                 if eng.slo is not None
+                 and any(eng.slo.violations().values())}
+        if fired:
+            raise SystemExit(f"SLO violations: {fired}")
 
 
 if __name__ == "__main__":

@@ -18,7 +18,8 @@ import argparse
 import json
 import sys
 
-from repro.obs.validate import validate_chrome_trace, validate_snapshot
+from repro.obs.validate import (validate_attribution,
+                                validate_chrome_trace, validate_snapshot)
 
 
 def _looks_like_snapshot(doc: dict) -> bool:
@@ -26,7 +27,7 @@ def _looks_like_snapshot(doc: dict) -> bool:
                for v in doc.values())
 
 
-def check_metrics_file(path: str) -> list:
+def check_metrics_file(path: str, require_attribution: bool = False) -> list:
     with open(path) as f:
         doc = json.load(f)
     if not isinstance(doc, dict):
@@ -39,8 +40,11 @@ def check_metrics_file(path: str) -> list:
             problems.append(f"{prefix or path}: snapshot is not an object")
             continue
         n_metrics += len(snap)
-        problems.extend(f"{prefix + ': ' if prefix else ''}{p}"
-                        for p in validate_snapshot(snap))
+        pre = f"{prefix + ': ' if prefix else ''}"
+        problems.extend(f"{pre}{p}" for p in validate_snapshot(snap))
+        problems.extend(
+            f"{pre}{p}" for p in validate_attribution(
+                snap, require=require_attribution))
     print(f"{path}: {n_metrics} metrics across {len(snaps)} snapshot(s)")
     return problems
 
@@ -60,13 +64,18 @@ def main(argv=None) -> int:
                     help="metrics snapshot JSON to validate (repeatable)")
     ap.add_argument("--trace", action="append", default=[],
                     help="Chrome trace JSON to validate (repeatable)")
+    ap.add_argument("--require-attribution", action="store_true",
+                    help="fail if a metrics snapshot carries no "
+                         "serving_step_attr_* family (the bench gate "
+                         "expects attributed engines)")
     args = ap.parse_args(argv)
     if not args.metrics and not args.trace:
         ap.error("nothing to check: pass --metrics and/or --trace")
 
     problems = []
     for path in args.metrics:
-        problems.extend(check_metrics_file(path))
+        problems.extend(check_metrics_file(
+            path, require_attribution=args.require_attribution))
     for path in args.trace:
         problems.extend(check_trace_file(path))
 

@@ -36,7 +36,11 @@ import sys
 
 EXACT_KEYS = ("requests", "gen_tokens", "engine_steps", "pool_evictions",
               "tokens_match", "gamma")
-TIMING_KEYS = ("ttft", "tpot", "throughput")
+# timing-class keys get the loose machine-speed tolerance; attribution,
+# roofline and drift joins divide by measured wall time (and SLO firing
+# depends on it), so they classify with the timings
+TIMING_KEYS = ("ttft", "tpot", "throughput", "attr_", "roofline",
+               "drift", "slo_")
 
 
 def classify(name: str) -> str:

@@ -1,0 +1,161 @@
+"""Persistent serving-perf history: append-only JSONL + trajectory check.
+
+Every gated bench run leaves one provenance-stamped line in
+``benchmarks/history/perf_history.jsonl`` — the {meta, metrics} payload
+``bench_serving --json`` writes, plus a record timestamp — so the
+repo accumulates a perf trajectory instead of only a pass/fail against
+the latest committed baseline. CI appends the current run and then runs
+the ``check`` subcommand, which fails on:
+
+  * structural rot — unparseable lines, records missing provenance
+    (git_sha / jax_version / config_hash) or metrics;
+  * trajectory collapse — the newest record's key metric (default
+    ``serving/throughput_tok_s``) falling below ``1/factor`` of the
+    median of the prior runs (factor defaults to 5.0: CI machines vary
+    wildly, so only order-of-magnitude cliffs fail; the committed
+    ``check_regression`` gate stays the tight same-machine check).
+
+Usage:
+    python benchmarks/perf_history.py append --result serving_bench.json \
+        --history benchmarks/history/perf_history.jsonl
+    python benchmarks/perf_history.py check \
+        --history benchmarks/history/perf_history.jsonl
+    python benchmarks/perf_history.py show --history ... [--key ...]
+
+``bench_serving --history PATH`` appends directly, skipping the
+intermediate file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+DEFAULT_HISTORY = os.path.join(os.path.dirname(__file__), "history",
+                               "perf_history.jsonl")
+DEFAULT_KEY = "serving/throughput_tok_s"
+REQUIRED_META = ("bench", "git_sha", "jax_version", "config_hash")
+
+
+def append_record(path: str, payload: Dict) -> Dict:
+    """Append one bench result ({meta, metrics}) as a history line."""
+    problems = _record_problems(payload, where="payload")
+    if problems:
+        raise ValueError("refusing to append a malformed record: "
+                         + "; ".join(problems))
+    rec = {"recorded_unix": time.time(), "meta": payload["meta"],
+           "metrics": payload["metrics"]}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(rec, sort_keys=True) + "\n")
+    return rec
+
+
+def load_history(path: str) -> List[Dict]:
+    """Parse every line; raises ValueError naming the first bad line."""
+    records = []
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            if not line.strip():
+                continue
+            try:
+                records.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{i}: unparseable history line "
+                                 f"({e})") from e
+    return records
+
+
+def _record_problems(rec: Dict, where: str) -> List[str]:
+    out = []
+    meta = rec.get("meta")
+    if not isinstance(meta, dict):
+        return [f"{where}: no meta block"]
+    for k in REQUIRED_META:
+        if not meta.get(k):
+            out.append(f"{where}: meta.{k} missing/empty")
+    metrics = rec.get("metrics")
+    if not isinstance(metrics, dict) or not metrics:
+        out.append(f"{where}: no metrics")
+    else:
+        bad = [k for k, v in metrics.items()
+               if not isinstance(v, (int, float))]
+        if bad:
+            out.append(f"{where}: non-numeric metrics {bad[:3]}")
+    return out
+
+
+def check_history(path: str, key: str = DEFAULT_KEY,
+                  factor: float = 5.0) -> List[str]:
+    """Validate the whole trajectory; returns problems (empty = pass)."""
+    try:
+        records = load_history(path)
+    except (OSError, ValueError) as e:
+        return [str(e)]
+    if not records:
+        return [f"{path}: empty history (seed it with one append)"]
+    problems = []
+    for i, rec in enumerate(records, 1):
+        problems += _record_problems(rec, where=f"record {i}")
+    times = [r.get("recorded_unix", 0) for r in records]
+    if times != sorted(times):
+        problems.append("records are not in append (time) order")
+    vals = [r["metrics"][key] for r in records
+            if isinstance(r.get("metrics"), dict)
+            and isinstance(r["metrics"].get(key), (int, float))]
+    if not vals:
+        problems.append(f"no record carries trajectory key {key!r}")
+    elif len(vals) >= 2:
+        prior = sorted(vals[:-1])
+        median = prior[len(prior) // 2]
+        if vals[-1] < median / factor:
+            problems.append(
+                f"trajectory collapse: latest {key}={vals[-1]:.6g} is "
+                f"<1/{factor:g} of the prior median {median:.6g}")
+    return problems
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    p_app = sub.add_parser("append", help="append one bench result")
+    p_app.add_argument("--result", required=True,
+                       help="bench_serving --json output file")
+    p_app.add_argument("--history", default=DEFAULT_HISTORY)
+    p_chk = sub.add_parser("check", help="validate the trajectory")
+    p_chk.add_argument("--history", default=DEFAULT_HISTORY)
+    p_chk.add_argument("--key", default=DEFAULT_KEY)
+    p_chk.add_argument("--factor", type=float, default=5.0)
+    p_show = sub.add_parser("show", help="print the trajectory of a key")
+    p_show.add_argument("--history", default=DEFAULT_HISTORY)
+    p_show.add_argument("--key", default=DEFAULT_KEY)
+    args = ap.parse_args(argv)
+
+    if args.cmd == "append":
+        with open(args.result) as f:
+            payload = json.load(f)
+        rec = append_record(args.history, payload)
+        print(f"appended {rec['meta'].get('bench')} @ "
+              f"{rec['meta'].get('git_sha', '')[:12]} to {args.history}")
+    elif args.cmd == "check":
+        problems = check_history(args.history, key=args.key,
+                                 factor=args.factor)
+        if problems:
+            for p in problems:
+                print(f"FAIL: {p}")
+            raise SystemExit(1)
+        n = len(load_history(args.history))
+        print(f"perf history OK: {n} record(s), key {args.key!r}")
+    elif args.cmd == "show":
+        for rec in load_history(args.history):
+            m = rec.get("meta", {})
+            v = rec.get("metrics", {}).get(args.key)
+            print(f"{m.get('git_sha', 'unknown')[:12]}  "
+                  f"jax={m.get('jax_version', '?')}  "
+                  f"{args.key}={v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,10 +16,20 @@ gives the useful-compute time, and
 
 is the MFU-style score reported in EXPERIMENTS.md §Perf.
 
+Hardware peaks come from ``costmodel.HardwareConfig`` (peak_flops /
+hbm_bw / link_bw — the same substrate the live attribution layer in
+``repro.obs.attribution`` normalizes against), so the offline roofline
+and the serving engine's ``serving_roofline_*`` gauges are computed
+against one set of constants.
+
 Usage::
 
     PYTHONPATH=src:. python -m benchmarks.roofline [--mesh singlepod] \
         [--md runs/roofline_singlepod.md]
+
+    # serving mode: roofline the engine's attribution snapshot
+    # (bench_serving --metrics-out metrics.json)
+    PYTHONPATH=src:. python -m benchmarks.roofline --metrics metrics.json
 """
 from __future__ import annotations
 
@@ -30,13 +40,12 @@ import os
 from typing import Dict, List
 
 from repro.configs.base import SHAPES
+from repro.core.costmodel import HardwareConfig
 from repro.models.registry import ARCHS
 from repro.models.schema import param_count
 from repro.models.schema_builder import build_schema
 
-PEAK_FLOPS = 197e12          # bf16 / chip
-HBM_BW = 819e9               # B/s
-LINK_BW = 50e9               # B/s/link
+HW = HardwareConfig()        # TPU-v5e-class reference peaks
 RUNS = os.path.join(os.path.dirname(__file__), "..", "runs", "dryrun")
 
 
@@ -89,7 +98,7 @@ def suggest(rec: dict, dominant: str) -> str:
             "the int8 2x MXU rate for the quantized dual-pass")
 
 
-def analyze_mesh(mesh: str) -> List[dict]:
+def analyze_mesh(mesh: str, hw: HardwareConfig = HW) -> List[dict]:
     rows = []
     for path in sorted(glob.glob(os.path.join(RUNS, mesh, "*.json"))):
         rec = json.load(open(path))
@@ -97,7 +106,7 @@ def analyze_mesh(mesh: str) -> List[dict]:
             continue
         arch, shape_name = rec["arch"], rec["shape"]
         n_dev = rec["n_devices"]
-        t_comp = rec["flops_hlo"] / PEAK_FLOPS
+        t_comp = rec["flops_hlo"] / hw.peak_flops
         # HBM term: structural lower bound — every program argument is
         # read once and every output written once per step (params, opt
         # state, KV caches, batch). This is exact for decode (weight/cache
@@ -107,13 +116,13 @@ def analyze_mesh(mesh: str) -> List[dict]:
         # per-op I/O over-states TPU HBM traffic by an order of magnitude.
         mem = rec["memory"]
         hbm_lb = mem["argument_size_b"] + mem["output_size_b"]
-        t_mem = hbm_lb / HBM_BW
-        t_mem_diag = rec["hbm_bytes_hlo"] / HBM_BW
-        t_coll = rec["collective_bytes"].get("total", 0.0) / LINK_BW
+        t_mem = hbm_lb / hw.hbm_bw
+        t_mem_diag = rec["hbm_bytes_hlo"] / hw.hbm_bw
+        t_coll = rec["collective_bytes"].get("total", 0.0) / hw.link_bw
         terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
         dominant = max(terms, key=terms.get)
         mf = model_flops(arch, shape_name)
-        t_useful = mf / n_dev / PEAK_FLOPS
+        t_useful = mf / n_dev / hw.peak_flops
         frac = t_useful / max(terms.values()) if max(terms.values()) else 0
         rows.append({
             "arch": arch, "shape": shape_name, "mesh": mesh,
@@ -129,6 +138,83 @@ def analyze_mesh(mesh: str) -> List[dict]:
             "note": suggest(rec, dominant),
         })
     return rows
+
+
+def _series_map(snap: dict, name: str, label: str) -> Dict[str, dict]:
+    """{label value: series entry} for one metric of one snapshot."""
+    m = snap.get(name)
+    if not m:
+        return {}
+    return {s["labels"].get(label, ""): s for s in m.get("series", [])}
+
+
+def analyze_snapshot(path: str, hw: HardwareConfig = HW) -> List[dict]:
+    """Roofline the serving engine's attribution snapshot.
+
+    ``path`` is a ``--metrics-out`` artifact: ``{prefix: snapshot}``
+    (bench_serving) or one bare registry snapshot (serve.py). Each
+    attributed phase with measured step times becomes one row with the
+    same three terms as the dry-run mode, plus achieved utilization.
+    """
+    with open(path) as f:
+        data = json.load(f)
+    if "serving_step_attr_flops" in data:          # bare snapshot
+        data = {"serving": data}
+    rows = []
+    for prefix in sorted(data):
+        snap = data[prefix]
+        flops = _series_map(snap, "serving_step_attr_flops", "phase")
+        hbm = _series_map(snap, "serving_step_attr_hbm_bytes", "phase")
+        tokens = _series_map(snap, "serving_step_attr_tokens", "phase")
+        lat = _series_map(snap, "serving_step_seconds", "phase")
+        coll = {}
+        for s in (snap.get("serving_step_attr_coll_bytes") or
+                  {"series": []})["series"]:
+            if s["labels"].get("kind") == "total":
+                coll[s["labels"]["phase"]] = s["value"]
+        for phase in sorted(flops):
+            t_comp = flops[phase]["value"] / hw.peak_flops
+            t_mem = hbm[phase]["value"] / hw.hbm_bw
+            t_coll = coll.get(phase, 0.0) / hw.link_bw
+            terms = {"compute": t_comp, "memory": t_mem,
+                     "collective": t_coll}
+            dominant = max(terms, key=terms.get)
+            row = {
+                "arch": prefix, "shape": phase, "mesh": "serving",
+                "n_devices": 1,
+                "t_compute_s": t_comp, "t_memory_s": t_mem,
+                "t_collective_s": t_coll, "dominant": dominant,
+                "tokens_per_step": tokens.get(phase, {}).get("value"),
+            }
+            s = lat.get(phase)
+            if s and s.get("count"):
+                measured = s["sum"] / s["count"]
+                row["measured_step_s"] = measured
+                row["compute_util"] = (flops[phase]["value"] / measured
+                                       / hw.peak_flops)
+                row["memory_util"] = (hbm[phase]["value"] / measured
+                                      / hw.hbm_bw)
+                # roofline bound vs what the step actually took
+                row["roofline_fraction"] = max(terms.values()) / measured
+            rows.append(row)
+    return rows
+
+
+def snapshot_markdown(rows: List[dict]) -> str:
+    hdr = ("| engine | phase | compute s | memory s | collective s | "
+           "dominant | measured s | compute util | memory util |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        meas = r.get("measured_step_s")
+        tail = ("- | - | - |" if meas is None else
+                f"{meas:.3e} | {r['compute_util']:.2e} | "
+                f"{r['memory_util']:.2e} |")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"{r['dominant']} | {tail}\n")
+    return "".join(out)
 
 
 def to_markdown(rows: List[dict]) -> str:
@@ -149,15 +235,25 @@ def to_markdown(rows: List[dict]) -> str:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="singlepod")
+    ap.add_argument("--metrics", default=None,
+                    help="roofline a serving metrics snapshot (the "
+                         "attribution artifact bench_serving/serve.py "
+                         "--metrics-out writes) instead of the dry-run "
+                         "trainer JSONs")
     ap.add_argument("--md", default=None)
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
-    rows = analyze_mesh(args.mesh)
-    md = to_markdown(rows)
-    print(md)
-    for r in rows:
-        print(f"# {r['arch']}/{r['shape']}: {r['dominant']}-bound -> "
-              f"{r['note']}")
+    if args.metrics:
+        rows = analyze_snapshot(args.metrics)
+        md = snapshot_markdown(rows)
+        print(md)
+    else:
+        rows = analyze_mesh(args.mesh)
+        md = to_markdown(rows)
+        print(md)
+        for r in rows:
+            print(f"# {r['arch']}/{r['shape']}: {r['dominant']}-bound -> "
+                  f"{r['note']}")
     if args.md:
         with open(args.md, "w") as f:
             f.write(md)

@@ -53,6 +53,14 @@ class HardwareConfig:
     sparqle_power_ovh: float = 1.07
     sparqle_area_ovh: float = 1.055
     pipeline_fill_cycles: int = 64
+    # system-level roofline peaks (per chip; TPU-v5e-class reference):
+    # live attribution (obs/attribution.py) and benchmarks/roofline.py
+    # normalize achieved FLOP/s, HBM bytes/s and interconnect bytes/s
+    # against these — they describe the serving substrate, not the §4
+    # SRAM-level accelerator modeled by the knobs above
+    peak_flops: float = 197e12           # FLOP/s
+    hbm_bw: float = 819e9                # B/s
+    link_bw: float = 50e9                # B/s per ICI link
 
 
 @dataclasses.dataclass

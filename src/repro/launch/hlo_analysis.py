@@ -26,11 +26,20 @@ import re
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple
 
+# bytes per element; sub-byte dtypes (XLA packs two s4/u4 per byte, four
+# s2/u2) carry fractional sizes — shape_bytes returns floats
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1, "f8e4m3b11fnuz": 1, "s4": 0.5, "u4": 0.5,
+    "s2": 0.25, "u2": 0.25, "u1": 0.125,
 }
+# shapes that carry no payload bytes (control tokens, opaque handles)
+_ZERO_SIZE_DTYPES = {"token", "opaque"}
+# what a dtype token looks like — used to separate genuinely-unknown
+# dtypes from incidental `word[digits]` text (slice bounds etc.)
+_DTYPE_LIKE_RE = re.compile(r"^(?:pred|token|opaque|bf\d+|[sufc]\d+\w*)$")
 
 _SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
 # shape group is lazy; the opcode must be a word immediately followed by '('
@@ -53,8 +62,22 @@ def shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
             if m.group(1) in _DTYPE_BYTES]
 
 
-def shape_bytes(shape_str: str) -> int:
-    total = 0
+def unknown_dtypes_in(shape_str: str) -> List[str]:
+    """Dtype-looking tokens in a shape string the byte table can't size.
+
+    A nonempty return means ``shape_bytes`` silently dropped elements —
+    the analyzer records these on :class:`HloStats` and ``analyze(...,
+    strict=True)`` turns them into a hard error instead of undercounted
+    HBM bytes.
+    """
+    return [m.group(1) for m in _SHAPE_RE.finditer(shape_str)
+            if m.group(1) not in _DTYPE_BYTES
+            and m.group(1) not in _ZERO_SIZE_DTYPES
+            and _DTYPE_LIKE_RE.match(m.group(1))]
+
+
+def shape_bytes(shape_str: str) -> float:
+    total = 0.0
     for dt, dims in shape_dims(shape_str):
         n = 1
         for d in dims:
@@ -93,9 +116,23 @@ class Computation:
 
 def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
     """Parse computations; returns ({name: comp}, entry_name)."""
+    comps, entry, _ = parse_hlo_ex(text)
+    return comps, entry
+
+
+def parse_hlo_ex(text: str) -> Tuple[Dict[str, Computation],
+                                     Optional[str], List[str]]:
+    """Parse computations, also returning the unparsed op lines.
+
+    The third element lists every ``name = ...`` line *inside* a
+    computation body that the op regex failed to match — ops the walker
+    would otherwise silently skip (module headers and scheduling
+    annotations outside computations are not ops and are not counted).
+    """
     comps: Dict[str, Computation] = {}
     entry = None
     cur: Optional[Computation] = None
+    unparsed: List[str] = []
     for line in text.splitlines():
         s = line.strip()
         header = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{$", s)
@@ -114,7 +151,9 @@ def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
         if m:
             cur.ops.append(Op(m.group(1), m.group(2).strip(), m.group(3),
                               m.group(4)))
-    return comps, entry
+        elif "=" in s and not s.startswith(("//", "#")):
+            unparsed.append(f"{cur.name}: {s}")
+    return comps, entry, unparsed
 
 
 def _trip_count(op: Op, comps: Dict[str, Computation],
@@ -223,11 +262,35 @@ class HloStats:
         default_factory=list)
     top_colls: List[Tuple[float, str]] = dataclasses.field(
         default_factory=list)
+    # coverage accounting: dtypes the byte table could not size (per-op
+    # occurrence counts) and op lines the parser could not match —
+    # nonempty means the byte/flop totals above undercount
+    unknown_dtypes: Dict[str, int] = dataclasses.field(default_factory=dict)
+    unparsed_ops: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def complete(self) -> bool:
+        """True when every op parsed and every dtype was sized."""
+        return not self.unknown_dtypes and not self.unparsed_ops
 
 
-def analyze(text: str) -> HloStats:
-    comps, entry = parse_hlo(text)
+class HloCoverageError(ValueError):
+    """``analyze(strict=True)`` found ops or dtypes it cannot account."""
+
+
+def analyze(text: str, strict: bool = False) -> HloStats:
+    """Walk optimized HLO text into :class:`HloStats`.
+
+    ``strict=True`` raises :class:`HloCoverageError` when the module
+    contains unparsed op lines or dtypes missing from the byte table,
+    instead of returning silently-undercounted totals — the mode the
+    serving attribution layer uses, where a skipped op means the
+    roofline gauges lie.
+    """
+    comps, entry, unparsed = parse_hlo_ex(text)
     if entry is None:
+        if strict:
+            raise HloCoverageError("no ENTRY computation found in HLO text")
         return HloStats()
     mult = compute_multipliers(comps, entry)
     stats = HloStats()
@@ -269,4 +332,29 @@ def analyze(text: str) -> HloStats:
                             reverse=True)[:12]
     stats.top_colls = sorted(((v, k) for k, v in coll_acc.items()),
                              reverse=True)[:12]
+    stats.unparsed_ops = unparsed
+    unk: Dict[str, int] = defaultdict(int)
+    for comp in comps.values():
+        for op in comp.ops:
+            toks = unknown_dtypes_in(op.shape)
+            if (not toks and "[" in op.shape and not shape_dims(op.shape)
+                    and not any(z in op.shape
+                                for z in _ZERO_SIZE_DTYPES)):
+                # result shape sized to zero ops: a dtype so exotic it
+                # doesn't even look like one still must not pass silently
+                head = op.shape.split("[", 1)[0].strip()
+                toks = [head.split()[-1] if head else "?"]
+            for dt in toks:
+                unk[dt] += 1
+    stats.unknown_dtypes = dict(unk)
+    if strict and not stats.complete:
+        detail = []
+        if stats.unknown_dtypes:
+            detail.append(f"unknown dtypes {stats.unknown_dtypes}")
+        if stats.unparsed_ops:
+            sample = "; ".join(stats.unparsed_ops[:3])
+            detail.append(f"{len(stats.unparsed_ops)} unparsed op "
+                          f"line(s), e.g. {sample!r}")
+        raise HloCoverageError("HLO coverage incomplete: "
+                               + "; ".join(detail))
     return stats

@@ -83,6 +83,9 @@ def _engine_serve(cfg, qparams, prompts, args, serve_mesh=None):
     n_pages = args.n_pages or (
         data_ways * (1 + pages_per_seq * batch_per_shard))
     n_pages += (-n_pages) % data_ways            # pages split over data
+    from repro.obs.slo import parse_slo_list
+    slos = [slo for s in getattr(args, "slo", None) or []
+            for slo in parse_slo_list(s)]
     kw = dict(
         pool_config=PoolConfig(n_pages=n_pages, page_size=args.page_size),
         sched_config=SchedulerConfig(
@@ -90,12 +93,19 @@ def _engine_serve(cfg, qparams, prompts, args, serve_mesh=None):
             token_budget=args.token_budget,
             prefill_chunk=args.prefill_chunk,
             max_pages_per_seq=pages_per_seq),
-        mesh=serve_mesh)
+        mesh=serve_mesh, slos=slos)
     if gamma > 0:
         eng = SpeculativeEngine(cfg, qparams, spec=SpecConfig(gamma=gamma),
                                 **kw)
     else:
         eng = Engine(cfg, qparams, **kw)
+    if getattr(args, "attribute", False):
+        attr = eng.attribute_steps()
+        for phase, c in sorted(attr.summary().items()):
+            print(f"attributed {phase}: {c['flops']/1e6:.1f} MFLOP/step, "
+                  f"{c['hbm_bytes']/1e6:.1f} MB HBM/step, "
+                  f"{c['coll_bytes_total']/1e3:.1f} kB collectives "
+                  f"(compiled in {c['compile_seconds']:.2f} s)")
     if serve_mesh is not None:
         print(f"serving on mesh {dict(serve_mesh.shape)} "
               f"({serve_mesh.size} devices): decode slots/pages sharded "
@@ -131,6 +141,14 @@ def _engine_serve(cfg, qparams, prompts, args, serve_mesh=None):
               f"{agg['spec_tokens_per_step']:.2f} tokens/cycle")
     print(f"  pool: {agg['pool_utilization']*100:.0f}% pages in use at "
           f"drain, {agg['pool_evictions']} evictions")
+    if eng.slo is not None:
+        for rep in eng.slo.report():
+            state = "VIOLATING" if rep["violating"] else "ok"
+            print(f"  SLO {rep['slo']}: p{rep['percentile']:g} = "
+                  f"{rep['value']:.4g} {rep['unit']} (target "
+                  f"{rep['target']:g}) [{state}], "
+                  f"{rep['violations']} violation(s), burn rate "
+                  f"{rep['burn_rate']:.2f}")
     return eng
 
 
@@ -161,6 +179,17 @@ def main(argv=None) -> None:
     ap.add_argument("--spec-gamma", type=int, default=0,
                     help="self-speculative decoding: LSB4-only draft "
                          "window per verify cycle (0 = off)")
+    ap.add_argument("--slo", action="append", default=[],
+                    help="declarative SLO spec, repeatable and/or "
+                         "comma-separated (e.g. --slo ttft:p95<0.25 "
+                         "--slo queue_depth:p50<4): "
+                         "the engine watches the signal's sliding-window "
+                         "percentile and reports violations + burn rate "
+                         "(docs/observability.md)")
+    ap.add_argument("--attribute", action="store_true",
+                    help="attribute the compiled serving steps at warm-up "
+                         "(per-step FLOPs/HBM/collective bytes + live "
+                         "roofline and cost-model drift gauges)")
     ap.add_argument("--metrics-out", default="",
                     help="write the engine's metrics-registry snapshot "
                          "(JSON) here after the run (engine path only)")
@@ -198,6 +227,10 @@ def main(argv=None) -> None:
         raise SystemExit("--metrics-out/--trace-out read the paged "
                          "engine's observability bundle; the --legacy "
                          "path has none (drop one of the two)")
+    if args.legacy and (args.slo or args.attribute):
+        raise SystemExit("--slo/--attribute drive the paged engine's "
+                         "observability; the --legacy path has none "
+                         "(drop one of the two)")
     # ambient 1x1 mesh for the GSPMD tail paths (sparsity/cost-model
     # report); the engine gets the serving mesh explicitly
     mesh = make_smoke_mesh()

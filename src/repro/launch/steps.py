@@ -258,6 +258,26 @@ def with_trace_annotation(name: str, fn):
     return wrapped
 
 
+def abstract_like(tree: Any) -> Any:
+    """Map a tree of live arrays to ``ShapeDtypeStruct`` avals.
+
+    The attribution layer (``obs/attribution.py``) lowers each serving
+    step a second time to inspect its optimized HLO; doing that against
+    abstract avals — rather than the live arguments — means buffers
+    marked for donation in the real jitted step are never at risk, and
+    no device transfer happens. Shardings are preserved when the leaf
+    carries one (sharded engines lower to the same SPMD program the
+    runtime executes).
+    """
+    def _leaf(x: Any) -> jax.ShapeDtypeStruct:
+        sharding = getattr(x, "sharding", None)
+        try:
+            return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=sharding)
+        except TypeError:
+            return jax.ShapeDtypeStruct(x.shape, x.dtype)
+    return jax.tree_util.tree_map(_leaf, tree)
+
+
 def make_engine_prefill_chunk(cfg: ModelConfig, *,
                               mesh: Optional[Mesh] = None,
                               param_specs=None, pool_specs=None):

@@ -9,6 +9,11 @@
                optional ``jax.profiler.TraceAnnotation`` pass-through
   * validate — artifact schema validators shared by tests and the CI
                metric-name/unit check
+  * attribution — compiled-HLO per-step cost attribution joined with
+               measured step times: roofline utilization + cost-model
+               drift gauges
+  * slo      — declarative serving SLOs (sliding-window percentiles,
+               burn rate, edge-triggered violation watchdog)
 
 :class:`Observability` bundles one registry + one tracer around a shared
 clock; the serving engine owns one and threads it through the scheduler,
@@ -42,7 +47,17 @@ class Observability:
                              xla_annotations=xla_annotations)
 
 
+# attribution/slo import AFTER Observability: they are host-only leaf
+# modules importing repro.obs.metrics / repro.obs.trace directly, and
+# re-exporting them here keeps `from repro.obs import SLO, ...` working
+# without a package-init cycle
+from repro.obs.attribution import StepAttribution, StepCost  # noqa: E402
+from repro.obs.slo import (SLO, SLOMonitor, SlidingWindow,  # noqa: E402
+                           attach_engine_slos, parse_slo, parse_slo_list)
+
 __all__ = ["Counter", "DEFAULT_LATENCY_BUCKETS", "ENGINE_TRACK", "Gauge",
            "Histogram", "METRIC_NAME_RE", "MetricsRegistry",
-           "Observability", "REQUEST_TRACK_BASE", "SpanHandle", "Tracer",
+           "Observability", "REQUEST_TRACK_BASE", "SLO", "SLOMonitor",
+           "SlidingWindow", "SpanHandle", "StepAttribution", "StepCost",
+           "Tracer", "attach_engine_slos", "parse_slo", "parse_slo_list",
            "validate_chrome_trace", "validate_snapshot"]

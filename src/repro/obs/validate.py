@@ -74,6 +74,107 @@ def validate_snapshot(snap: Dict) -> List[str]:
     return problems
 
 
+def _label_set(snap: Dict, name: str, label: str) -> set:
+    entry = snap.get(name) or {}
+    return {s.get("labels", {}).get(label)
+            for s in entry.get("series", [])}
+
+
+def _series_values(snap: Dict, name: str):
+    entry = snap.get(name) or {}
+    for s in entry.get("series", []):
+        if "value" in s:
+            yield s.get("labels", {}), s["value"]
+
+
+ATTRIBUTION_METRICS = ("serving_step_attr_flops",
+                       "serving_step_attr_hbm_bytes",
+                       "serving_step_attr_tokens",
+                       "serving_attr_compile_seconds")
+SLO_METRICS = ("serving_slo_value", "serving_slo_target",
+               "serving_slo_compliant", "serving_slo_burn_rate")
+
+
+def validate_attribution(snap: Dict, require: bool = False) -> List[str]:
+    """Family-level contract for the attribution / roofline / drift /
+    SLO metrics inside one registry snapshot.
+
+    Present-family consistency is always checked (same phase set across
+    the ``serving_step_attr_*`` gauges, non-negative finite values,
+    SLO compliance gauges boolean, targets present for every SLO).
+    ``require=True`` additionally fails when the attribution family is
+    absent entirely — the CI bench gate passes this so a silently
+    un-attributed engine cannot sail through the schema check.
+    """
+    problems: List[str] = []
+    if not isinstance(snap, dict):
+        return ["snapshot must be a dict"]
+    has_attr = "serving_step_attr_flops" in snap
+    if require and not has_attr:
+        problems.append("attribution family missing: no "
+                        "serving_step_attr_flops in snapshot (engine "
+                        "never ran attribute_steps?)")
+    if has_attr:
+        for name in ATTRIBUTION_METRICS:
+            if name not in snap:
+                problems.append(f"attribution family incomplete: "
+                                f"{name} missing")
+        phases = _label_set(snap, "serving_step_attr_flops", "phase")
+        if not phases:
+            problems.append("serving_step_attr_flops has no series")
+        for name in ("serving_step_attr_hbm_bytes",
+                     "serving_step_attr_tokens"):
+            got = _label_set(snap, name, "phase")
+            if name in snap and got != phases:
+                problems.append(f"{name}: phase set {sorted(map(str, got))} "
+                                f"!= attr flops phases "
+                                f"{sorted(map(str, phases))}")
+        for name in ("serving_step_attr_flops",
+                     "serving_step_attr_hbm_bytes",
+                     "serving_step_attr_tokens",
+                     "serving_step_attr_coll_bytes"):
+            for labels, v in _series_values(snap, name):
+                if not (isinstance(v, (int, float)) and math.isfinite(v)
+                        and v >= 0):
+                    problems.append(f"{name}{labels}: bad value {v!r}")
+        for name in ("serving_roofline_compute_util_ratio",
+                     "serving_roofline_memory_util_ratio"):
+            for labels, v in _series_values(snap, name):
+                if not (isinstance(v, (int, float)) and math.isfinite(v)
+                        and v >= 0):
+                    problems.append(f"{name}{labels}: utilization must "
+                                    f"be finite and >= 0, got {v!r}")
+                if labels.get("phase") not in phases:
+                    problems.append(f"{name}{labels}: phase not "
+                                    f"attributed")
+        for labels, v in _series_values(
+                snap, "serving_costmodel_wire_drift_ratio"):
+            if not (isinstance(v, (int, float)) and math.isfinite(v)
+                    and v > 0):
+                problems.append(f"serving_costmodel_wire_drift_ratio"
+                                f"{labels}: ratio must be finite and "
+                                f"> 0, got {v!r}")
+    if "serving_slo_value" in snap:
+        for name in ("serving_slo_target", "serving_slo_compliant"):
+            if name not in snap:
+                problems.append(f"SLO family incomplete: {name} missing")
+        slos = _label_set(snap, "serving_slo_value", "slo")
+        targets = _label_set(snap, "serving_slo_target", "slo")
+        if not slos <= targets:
+            problems.append(f"SLOs without a target gauge: "
+                            f"{sorted(map(str, slos - targets))}")
+        for labels, v in _series_values(snap, "serving_slo_compliant"):
+            if v not in (0, 0.0, 1, 1.0):
+                problems.append(f"serving_slo_compliant{labels}: must "
+                                f"be 0 or 1, got {v!r}")
+        for labels, v in _series_values(snap, "serving_slo_burn_rate"):
+            if not (isinstance(v, (int, float)) and math.isfinite(v)
+                    and v >= 0):
+                problems.append(f"serving_slo_burn_rate{labels}: must "
+                                f"be finite and >= 0, got {v!r}")
+    return problems
+
+
 def validate_chrome_trace(trace: Dict) -> List[str]:
     """Problems in a Chrome trace-event JSON object.
 

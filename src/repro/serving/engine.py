@@ -40,7 +40,8 @@ class Engine:
                  pool_config: Optional[PoolConfig] = None,
                  sched_config: Optional[SchedulerConfig] = None,
                  clock=time.monotonic, mesh=None,
-                 obs: Optional[Observability] = None):
+                 obs: Optional[Observability] = None,
+                 slos=None):
         """``mesh`` (a ("data", "model") Mesh, e.g. ``make_smoke_mesh``)
         makes the engine mesh-native: the jitted steps run inside
         shard_map with weights tensor-parallel on "model", the paged pool
@@ -57,13 +58,22 @@ class Engine:
         ``metrics_snapshot()`` and the ``--metrics-out``/``--trace-out``
         artifacts. Instrumentation is host-side only — the traced/jitted
         step programs are unchanged.
+
+        ``slos`` (iterable of ``repro.obs.slo.SLO``) arms the SLO
+        watchdog: the engine feeds ``ttft``/``tpot`` at emit time and
+        ``queue_depth`` once per scheduler iteration, and violations
+        show up as counters + trace instants (docs/observability.md
+        §SLOs).
         """
         from repro.launch import steps as S
+        from repro.obs.slo import attach_engine_slos
         check_paged_support(cfg)
         self.cfg = cfg
         self._clock = clock
         self.obs = obs if obs is not None else Observability(clock=clock)
         self._init_metrics()
+        self.slo = attach_engine_slos(self, slos)
+        self._attr = None  # StepAttribution, built by attribute_steps()
         self.mesh = mesh if (mesh is not None and mesh.size > 1) else None
         pool_config = pool_config or PoolConfig()
         sched_config = sched_config or SchedulerConfig()
@@ -208,6 +218,8 @@ class Engine:
         with tr.span("engine_step", step=self.steps):
             with self._m_step_lat.time(phase="schedule"):
                 plan = self.sched.schedule()
+            if self.slo is not None:
+                self.slo.observe("queue_depth", float(len(self.sched.waiting)))
             for req, start, n in plan.prefill:
                 with tr.span("prefill_chunk", rid=req.rid, start=start,
                              n=n):
@@ -222,6 +234,79 @@ class Engine:
         self._m_steps.inc()
         self.steps += 1
         return events
+
+    # -- performance attribution ------------------------------------------
+
+    def attribute_steps(self, hw=None):
+        """Attribute the engine's jitted steps against their compiled HLO.
+
+        Lowers + compiles each serving step (prefill_chunk / decode; the
+        speculative engine extends this with draft / verify) against
+        abstract avals of its real runtime arguments — same shapes,
+        dtypes and shardings, so the analyzed program is the SPMD
+        program the engine executes — and registers per-step FLOPs, HBM
+        bytes and collective bytes (``serving_step_attr_*``). Explicit
+        and idempotent: call once after construction (the bench and
+        ``serve.py --attribute`` do); re-attribution is a no-op.
+
+        ``hw`` (``costmodel.HardwareConfig``) sets the roofline peaks
+        and the cost-model latency predictor's substrate; defaults to
+        the paper's reference config. Returns the ``StepAttribution``.
+        """
+        from repro.obs.attribution import StepAttribution
+        if self._attr is None:
+            self._attr = StepAttribution(self.obs, hw=hw)
+        sds = jax.ShapeDtypeStruct
+        params_a, pool_a = self._attr_abstract_args()
+        if "prefill" not in self._attr.phases():
+            self._attr.attribute(
+                "prefill", self._prefill_fn,
+                (params_a, pool_a, sds((1, self._chunk), jnp.int32),
+                 sds((), jnp.int32), sds((), jnp.int32),
+                 sds((self._data_ways, self._n_page_steps), jnp.int32)),
+                tokens_per_step=self._chunk,
+                predict_seconds=self._phase_predictor("prefill"))
+        if "decode" not in self._attr.phases():
+            self._attr.attribute(
+                "decode", self._decode_fn,
+                (params_a, pool_a, sds((self._n_slots,), jnp.int32),
+                 sds((self._n_slots,), jnp.int32),
+                 sds((self._n_slots, self._n_page_steps), jnp.int32)),
+                tokens_per_step=self._n_slots,
+                predict_seconds=self._phase_predictor("decode"))
+        return self._attr
+
+    def _attr_abstract_args(self):
+        from repro.launch import steps as S
+        return S.abstract_like(self.params), S.abstract_like(self.pool.state)
+
+    def _costmodel_shape(self):
+        """The engine config as a ``costmodel.LMShape`` (same mapping
+        ``launch/serve.py`` uses for its analytic report)."""
+        from repro.core import costmodel as CM
+        cfg = self.cfg
+        return CM.LMShape(cfg.name, cfg.n_layers, cfg.d_model,
+                          max(1, cfg.n_heads), max(1, cfg.n_kv_heads),
+                          max(1, cfg.d_ff or cfg.moe_d_ff), cfg.vocab,
+                          w_bits=cfg.w_bits)
+
+    def _phase_predictor(self, phase: str):
+        """sparsity -> predicted seconds/step closure over
+        ``costmodel.phase_cost`` (paper §4, Table 1 substrate)."""
+        from repro.core import costmodel as CM
+        shape = self._costmodel_shape()
+        hw = self._attr.hw
+        decode = phase != "prefill"
+        m_tokens = self._chunk if phase == "prefill" else self._n_slots
+        seq_for_attn = self._n_page_steps * self.pool.page_size
+
+        def predict(sparsity: float) -> float:
+            layers = CM.lm_linear_layers(
+                shape, m_tokens, sparsity, seq_for_attn=seq_for_attn,
+                decode=decode)
+            cost = CM.phase_cost(layers, hw, sparqle=True)
+            return cost.cycles / (hw.freq_ghz * 1e9)
+        return predict
 
     def aggregate_stats(self) -> Dict[str, float]:
         """Pool-level counters to pair with per-request ``req.stats()``.
@@ -273,6 +358,32 @@ class Engine:
             for i in range(per_tok.shape[0]):
                 self._g_layer_wire.set(float(per_tok[i]), layer=str(i))
                 self._g_layer_sparsity.set(float(spars[i]), layer=str(i))
+        self._join_attribution()
+
+    def _join_attribution(self) -> None:
+        """Join attributed step costs with measured step wall-times into
+        the roofline/drift gauges (read-time, like the other gauges)."""
+        if self._attr is None:
+            return
+        mean_sparsity = 0.0
+        if self.layer_sparsity_sum is not None and self.wire_tokens:
+            mean_sparsity = float(
+                self.layer_sparsity_sum.mean() / self.wire_tokens)
+        for phase in self._attr.phases():
+            n = self._m_step_lat.count(phase=phase)
+            if n:
+                self._attr.observe_runtime(
+                    phase, self._m_step_lat.mean(phase=phase),
+                    sparsity=mean_sparsity)
+        if self.layer_wire_bytes is not None and self.wire_tokens:
+            from repro.core.packing import PBM_WORD_BITS, pad_k
+            kp = pad_k(self.cfg.d_model)
+            fixed = kp / 2.0 + (kp // PBM_WORD_BITS) * 4.0  # LSB4 + PBM
+            spars = self.layer_sparsity_sum / self.wire_tokens
+            predicted = float(sum(fixed + (1.0 - s) * kp / 2.0
+                                  for s in spars))  # Eq. 1 per layer
+            measured = float(self.layer_wire_bytes.sum() / self.wire_tokens)
+            self._attr.observe_wire(measured, predicted)
 
     def metrics_snapshot(self) -> Dict[str, object]:
         """Refresh gauges and return the full registry snapshot
@@ -338,9 +449,15 @@ class Engine:
         now = self._clock()
         if req.t_first is None:
             req.t_first = now
-            self._m_ttft.observe(now - req.arrival)
+            ttft = now - req.arrival
+            self._m_ttft.observe(ttft)
+            if self.slo is not None:
+                self.slo.observe("ttft", ttft)
         elif req.t_last is not None:
-            self._m_tpot.observe(now - req.t_last)
+            tpot = now - req.t_last
+            self._m_tpot.observe(tpot)
+            if self.slo is not None:
+                self.slo.observe("tpot", tpot)
         req.t_last = now
         self._m_emitted.inc()
         req.context.append(token)

@@ -95,7 +95,7 @@ class SpeculativeEngine(Engine):
                  pool_config: Optional[PoolConfig] = None,
                  sched_config: Optional[SchedulerConfig] = None,
                  spec: SpecConfig = SpecConfig(),
-                 clock=time.monotonic, mesh=None, obs=None):
+                 clock=time.monotonic, mesh=None, obs=None, slos=None):
         from repro.launch import steps as S
         self.spec = spec
         g = spec.gamma
@@ -105,7 +105,7 @@ class SpeculativeEngine(Engine):
             decode_lookahead=g)
         super().__init__(cfg, params, pool_config=pool_config,
                          sched_config=sched_config, clock=clock, mesh=mesh,
-                         obs=obs)
+                         obs=obs, slos=slos)
         # draft/verify share the engine's mesh layout (self.mesh is None
         # when no multi-device mesh was given): the LSB4-only draft and
         # the batched verify run inside the same shard_map partitioning
@@ -141,6 +141,61 @@ class SpeculativeEngine(Engine):
         self._m_spec_emitted = r.counter(
             "serving_spec_tokens_emitted_total", "tokens emitted by "
             "accept/correct/bonus across all cycles", unit="tokens")
+
+    # -- performance attribution ------------------------------------------
+
+    def attribute_steps(self, hw=None):
+        """Extend base attribution with the speculative steps.
+
+        The ``draft`` phase wall-time (``serving_step_seconds{phase=
+        draft}``) wraps the whole γ-step host loop, so the draft cost is
+        attributed with ``calls_per_step=γ`` — one timed phase executes
+        the LSB4-only decode program γ times — keeping the runtime
+        roofline join apples-to-apples. ``verify`` is one (γ+1)-token
+        window step per phase.
+        """
+        attr = super().attribute_steps(hw=hw)
+        g = self.spec.gamma
+        sds = jax.ShapeDtypeStruct
+        params_a, pool_a = self._attr_abstract_args()
+        if "draft" not in attr.phases():
+            attr.attribute(
+                "draft", self._draft_fn,
+                (params_a, pool_a, sds((self._n_slots,), jnp.int32),
+                 sds((self._n_slots,), jnp.int32),
+                 sds((self._n_slots, self._n_page_steps), jnp.int32)),
+                tokens_per_step=self._n_slots * g, calls_per_step=g,
+                predict_seconds=self._spec_predictor("draft"))
+        if "verify" not in attr.phases():
+            attr.attribute(
+                "verify", self._verify_fn,
+                (params_a, pool_a, sds((self._n_slots, g + 1), jnp.int32),
+                 sds((self._n_slots,), jnp.int32),
+                 sds((self._n_slots, self._n_page_steps), jnp.int32)),
+                tokens_per_step=self._n_slots * (g + 1),
+                predict_seconds=self._spec_predictor("verify"))
+        return attr
+
+    def _spec_predictor(self, phase: str):
+        """sparsity -> predicted seconds per TIMED phase: γ LSB4-only
+        decode rounds for draft, one (γ+1)-token window for verify."""
+        from repro.core import costmodel as CM
+        shape = self._costmodel_shape()
+        hw = self._attr.hw
+        g = self.spec.gamma
+        seq_for_attn = self._n_page_steps * self.pool.page_size
+        lsb_only = phase == "draft"
+        m_tokens = self._n_slots if lsb_only else self._n_slots * (g + 1)
+        calls = g if lsb_only else 1
+
+        def predict(sparsity: float) -> float:
+            layers = CM.lm_linear_layers(
+                shape, m_tokens, sparsity, seq_for_attn=seq_for_attn,
+                decode=True)
+            cost = CM.phase_cost(layers, hw, sparqle=True,
+                                 lsb_only=lsb_only)
+            return calls * cost.cycles / (hw.freq_ghz * 1e9)
+        return predict
 
     # -- decode path -------------------------------------------------------
 
