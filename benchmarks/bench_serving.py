@@ -13,6 +13,14 @@ the batch composition of every step, and therefore every token stream
 are exactly reproducible run to run — wall-clock only feeds the timing
 metrics.
 
+A KV2 precision-ladder section always rides along (prefix
+``serving_kv2``): a long-context trace on the wide-head ``KV2_CFG`` run
+with the ladder disarmed, armed-but-idle (stream must match the
+disarmed run byte for byte — ``serving_kv2/tokens_match_no_demotion``
+is a hard invariant), and with an aggressive cold sweep, reporting
+demotion/promotion counts and the peak fraction of KV HBM reclaimed
+(``serving_kv2/hbm_reclaimed_pct``, floored at 25% by the bench).
+
 ``--spec-gamma N`` additionally runs the self-speculative engine
 (``serving/spec_decode.py``: γ LSB4-only draft steps + one batched
 full-precision verify) over the SAME trace and model, reporting draft
@@ -53,6 +61,16 @@ from repro.serving import (Engine, PoolConfig, SamplingParams,
 BENCH_CFG = ModelConfig(
     name="bench-serve-2l", family="transformer", n_layers=2, d_model=64,
     n_heads=8, n_kv_heads=4, head_dim=8, d_ff=128, vocab=64,
+    rope_theta=10_000.0, dtype="float32")
+
+# KV2 precision-ladder section: a wide-head long-context variant. The
+# per-page HBM split is what matters here — at head_dim=32 the packed
+# nibbles dominate the f32 scales (KV4 page = 20 bytes/token-head vs
+# KV2 = 12), so a demoted page reclaims 40% of its bytes, vs only 25%
+# at BENCH_CFG's head_dim=8 where scales are half the page.
+KV2_CFG = ModelConfig(
+    name="bench-kv2-2l", family="transformer", n_layers=2, d_model=64,
+    n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128, vocab=64,
     rope_theta=10_000.0, dtype="float32")
 
 STEP_DT = 0.05          # virtual seconds per engine step (admission clock)
@@ -151,6 +169,89 @@ def _drive(eng, trace):
             eng.step()
         step += 1
     return handles, time.monotonic() - t0
+
+
+def _drive_kv2(eng, trace):
+    """_drive plus per-step tracking of the peak fraction of KV HBM
+    bytes reclaimed by demotion: pool.kv_bytes_saved() over what the
+    held pages would cost all-KV4 (saved + held-at-current-tier)."""
+    handles = []
+    i = 0
+    t0 = time.monotonic()
+    step = 0
+    peak = 0.0
+    while i < len(trace) or eng.sched.has_work():
+        while i < len(trace) and trace[i][0] <= step:
+            _, prompt, gen = trace[i]
+            handles.append(eng.submit(
+                prompt, SamplingParams(max_new_tokens=gen)))
+            i += 1
+        if eng.sched.has_work():
+            eng.step()
+            saved = eng.pool.kv_bytes_saved()
+            if saved:
+                peak = max(peak,
+                           saved / (saved + eng.pool.kv_bytes_held()))
+        step += 1
+    return handles, time.monotonic() - t0, peak
+
+
+def _run_kv2_ladder(emit, engines, seed: int):
+    """KV2 precision-ladder section (docs/serving.md §precision ladder):
+    a long-context trace on the wide-head ``KV2_CFG``, run three ways —
+    ladder disarmed, armed-but-never-demoting (streams must match the
+    disarmed run byte for byte), and an aggressive cold sweep
+    (``demote_after_steps=1``, sparsity floor disabled) measuring how
+    much KV HBM demotion reclaims. The trace fits the pool, so the
+    pressure rung never fires and every counter is deterministic."""
+    params = draft_friendly_params(KV2_CFG, seed=seed)
+    qparams = quantize_model_params(
+        params, w_bits=4, k_percent=50.0, clip_l=-8.0, clip_h=23.0,
+        mode="sparqle", enable_clipping=True, tile_k=16)
+    rng = np.random.default_rng(seed + 1)
+    t = 0.0
+    trace = []
+    for _ in range(3):
+        t += rng.exponential(1.0)
+        plen = int(rng.integers(48, 64))
+        gen = int(rng.integers(24, 32))
+        trace.append((int(np.ceil(t / STEP_DT)),
+                      rng.integers(0, KV2_CFG.vocab, plen).tolist(), gen))
+    sched = SchedulerConfig(max_decode_batch=4, token_budget=96,
+                            prefill_chunk=32, max_pages_per_seq=12)
+
+    def make(kv2_pages: int, **kw):
+        eng = Engine(KV2_CFG, qparams,
+                     pool_config=PoolConfig(n_pages=24, page_size=16,
+                                            kv2_pages=kv2_pages, **kw),
+                     sched_config=sched)
+        eng.attribute_steps()
+        return eng
+
+    base = make(0)
+    base_handles, _, _ = _drive_kv2(base, trace)
+    nod = make(24, demote_after_steps=10**9)
+    nod_handles, _, _ = _drive_kv2(nod, trace)
+    match = (nod.pool.demotions == 0 and
+             all(hb.out_tokens == hn.out_tokens
+                 for hb, hn in zip(base_handles, nod_handles)))
+    emit("serving_kv2/tokens_match_no_demotion", int(match),
+         "armed-but-idle ladder greedy stream byte-identical to the "
+         "disarmed engine (and genuinely demoted nothing)")
+
+    eng = make(24, demote_after_steps=1, demote_min_sparsity=0.0)
+    engines["serving_kv2"] = eng
+    handles, wall, peak = _drive_kv2(eng, trace)
+    _report(emit, "serving_kv2", handles, wall, eng)
+    agg = eng.aggregate_stats()
+    emit("serving_kv2/demotions", agg["pool_demotions"],
+         "pages re-encoded KV4 -> KV2 (cold sweep)")
+    emit("serving_kv2/promotions", agg["pool_promotions"],
+         "demoted pages promoted back on touch")
+    emit("serving_kv2/kv_bytes_reclaimed", agg["kv_bytes_reclaimed"],
+         "cumulative KV HBM bytes freed by demotion events")
+    emit("serving_kv2/hbm_reclaimed_pct", peak * 100.0,
+         "peak % of held KV HBM reclaimed by demotion (vs all-KV4)")
 
 
 def _make_engine(cfg, qparams, spec_gamma: int, mesh=None, slos=None):
@@ -262,6 +363,10 @@ def run(emit, n_requests: int = 8, rate_hz: float = 2.0, seed: int = 0,
     handles, wall = _drive(eng, trace)
     base_tpot = _report(emit, "serving", handles, wall, eng)
 
+    # KV2 precision ladder: its own long-context config + trace
+    # (unsharded by design — the ladder's host bookkeeping is single-pool)
+    _run_kv2_ladder(emit, engines, seed)
+
     jmesh = None
     if mesh is not None:
         from repro.launch.mesh import make_smoke_mesh
@@ -372,7 +477,14 @@ def main() -> None:
     # smoke steps rely on a nonzero exit when equivalence breaks
     broken = [k for k, v in records.items()
               if k.endswith(("tokens_match_baseline",
-                             "tokens_match_single_device")) and v != 1.0]
+                             "tokens_match_single_device",
+                             "tokens_match_no_demotion")) and v != 1.0]
+    # the ladder must genuinely reclaim KV HBM on the long-context
+    # config — a silent demotion-policy regression fails the bench
+    reclaimed = records.get("serving_kv2/hbm_reclaimed_pct")
+    if reclaimed is not None and reclaimed < 25.0:
+        broken.append(
+            f"serving_kv2/hbm_reclaimed_pct={reclaimed:.1f} < 25")
 
     payload = None
     if args.json or args.history:

@@ -35,7 +35,8 @@ import math
 import sys
 
 EXACT_KEYS = ("requests", "gen_tokens", "engine_steps", "pool_evictions",
-              "tokens_match", "gamma")
+              "tokens_match", "gamma", "demotions", "promotions",
+              "bytes_reclaimed")
 # timing-class keys get the loose machine-speed tolerance; attribution,
 # roofline and drift joins divide by measured wall time (and SLO firing
 # depends on it), so they classify with the timings

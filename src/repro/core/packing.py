@@ -32,6 +32,7 @@ kernel operand form from a :class:`PackedSparqleActivation`.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import jax
@@ -41,6 +42,8 @@ from repro.core.sparqle import SparqleActivation
 
 PBM_WORD_BITS = 32
 K_ALIGN = 32          # lcm(2 nibbles/byte, 32 PBM bits/word)
+
+PLANE_WIDTHS = (1, 2, 4, 8)   # bit widths the parameterized codec supports
 
 
 def pad_k(k: int) -> int:
@@ -56,34 +59,74 @@ def _pad_cols(x: jax.Array, mult: int) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# nibble / bitmap primitives
+# parameterized plane / bitmap primitives
 # ---------------------------------------------------------------------------
+
+def pack_plane(vals: jax.Array, *, width: int = 4) -> jax.Array:
+    """(..., K mult of 8/width) values -> (..., K*width/8) bytes (int8).
+
+    The width-``k`` generalization of the nibble packer: ``8/width``
+    fields per byte, little-endian within the byte — field ``i`` of byte
+    ``j`` (value index ``j*(8/width) + i``) occupies bits
+    ``[i*width, (i+1)*width)``. Only the low ``width`` bits of each value
+    travel, so signed (two's-complement) and unsigned fields pack alike.
+    ``width=4`` reproduces :func:`pack_nibbles` exactly; ``width=8`` is
+    the identity layout (one masked byte per value).
+    """
+    if width not in PLANE_WIDTHS:
+        raise ValueError(f"width must be one of {PLANE_WIDTHS}, got {width}")
+    per = 8 // width
+    assert vals.shape[-1] % per == 0, (vals.shape, width)
+    mask = (1 << width) - 1
+    parts = [
+        jnp.left_shift(
+            jnp.bitwise_and(vals[..., i::per].astype(jnp.int32), mask),
+            i * width)
+        for i in range(per)
+    ]
+    acc = jnp.bitwise_and(functools.reduce(jnp.bitwise_or, parts), 0xFF)
+    return jnp.where(acc > 127, acc - 256, acc).astype(jnp.int8)
+
+
+def unpack_plane(packed: jax.Array, *, width: int = 4,
+                 signed: bool) -> jax.Array:
+    """Inverse of :func:`pack_plane`: (..., B) bytes -> (..., B*8/width)
+    field values (int8). ``signed`` sign-extends each ``width``-bit field
+    (two's-complement, range ``[-2^(width-1), 2^(width-1)-1]``); unsigned
+    yields ``[0, 2^width - 1]``."""
+    if width not in PLANE_WIDTHS:
+        raise ValueError(f"width must be one of {PLANE_WIDTHS}, got {width}")
+    per = 8 // width
+    b = jnp.bitwise_and(packed.astype(jnp.int32), 0xFF)
+    mask = (1 << width) - 1
+    half = 1 << (width - 1)
+    fields = []
+    for i in range(per):
+        f = jnp.bitwise_and(jnp.right_shift(b, i * width), mask)
+        if signed:
+            f = jnp.where(f >= half, f - (1 << width), f)
+        fields.append(f)
+    out = jnp.stack(fields, axis=-1)
+    return out.reshape(*packed.shape[:-1],
+                       packed.shape[-1] * per).astype(jnp.int8)
+
 
 def pack_nibbles(nib: jax.Array) -> jax.Array:
     """(..., K even) nibble values -> (..., K/2) bytes (int8 container).
 
     Byte ``j`` = ``nib[2j] & 0xF  |  (nib[2j+1] & 0xF) << 4``. Works for
     unsigned LSB4 ([0, 15]) and two's-complement MSB4 ([-8, 7]) alike —
-    only the low 4 bits of each value travel.
+    only the low 4 bits of each value travel. Alias of
+    :func:`pack_plane` at ``width=4``.
     """
-    assert nib.shape[-1] % 2 == 0, nib.shape
-    lo = jnp.bitwise_and(nib[..., 0::2], 0xF)
-    hi = jnp.bitwise_and(nib[..., 1::2], 0xF)
-    return jnp.bitwise_or(lo, jnp.left_shift(hi, 4)).astype(jnp.int8)
+    return pack_plane(nib, width=4)
 
 
 def unpack_nibbles(packed: jax.Array, *, signed: bool) -> jax.Array:
     """Inverse of :func:`pack_nibbles`. ``signed`` sign-extends each nibble
-    (MSB4 convention); unsigned yields values in [0, 15] (LSB4)."""
-    b = packed.astype(jnp.int8)
-    if signed:
-        lo = jnp.right_shift(jnp.left_shift(b, 4), 4)
-        hi = jnp.right_shift(b, 4)
-    else:
-        lo = jnp.bitwise_and(b, 0xF)
-        hi = jnp.bitwise_and(jnp.right_shift(b, 4), 0xF)
-    out = jnp.stack([lo, hi], axis=-1)
-    return out.reshape(*b.shape[:-1], b.shape[-1] * 2).astype(jnp.int8)
+    (MSB4 convention); unsigned yields values in [0, 15] (LSB4). Alias of
+    :func:`unpack_plane` at ``width=4``."""
+    return unpack_plane(packed, width=4, signed=signed)
 
 
 def pack_pbm(pbm: jax.Array) -> jax.Array:
@@ -259,3 +302,22 @@ def measured_wire_bytes_rows(q_int8: jax.Array) -> jax.Array:
 def dense_bytes_rows(q_int8: jax.Array) -> int:
     """Dense int8 bytes per row (the baseline the wire format displaces)."""
     return q_int8.shape[-1]
+
+
+def predicted_wire_bytes(n: int, sparsity: float, *, width: int = 4) -> float:
+    """Generalized Eq. 1: predicted wire bytes for ``n`` int8 elements
+    split into a dense ``width``-bit low plane, a 1-bit precision bitmap
+    and a compacted ``(8-width)``-bit high plane at high-plane sparsity
+    ``sparsity``::
+
+        bytes = n * (width/8 + 1/8 + (1 - sparsity) * (8 - width)/8)
+
+    ``width=4`` reproduces the paper's Eq. 1 exactly
+    (``n * (1/2 + 1/8 + (1-s)/2)``); ``width=8`` degenerates to dense
+    int8 plus the (useless) bitmap. The prediction ignores the PBM-word
+    rounding slack and stream byte rounding the packed layout adds (see
+    :func:`measured_wire_bytes_rows`).
+    """
+    if width not in PLANE_WIDTHS:
+        raise ValueError(f"width must be one of {PLANE_WIDTHS}, got {width}")
+    return n * (width / 8 + 1 / 8 + (1.0 - sparsity) * (8 - width) / 8)

@@ -30,6 +30,13 @@ Three entry points share the same kernel body (``_flash_step``):
     single-token computation (same block shapes, same dot shapes, same
     accumulation order) — bit-exact against a loop of T single-token
     paged decode calls by construction.
+
+A fourth entry point, :func:`kv_tiered_paged_decode_attention`, extends
+the paged decode variant with the KV2 precision-ladder read path: a
+second scalar-prefetched table carries a per-page tier id, the index maps
+route each grid step's DMA to the KV4 or KV2 slab accordingly, and the
+body selects the dequantized block by tier — bit-exact against
+``kv4_paged_decode_attention`` whenever every page is tier 0.
 """
 from __future__ import annotations
 
@@ -51,14 +58,37 @@ def _unpack4(q):  # int8 packed nibbles -> two sign-extended int8 planes
     return lo, hi
 
 
-def _flash_step(pos, s_idx, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, out_ref,
-                m_ref, l_ref, acc_ref, *, n_s: int, bs: int, scale: float):
-    """One cache-block step of the online-softmax scan for ONE query row
-    group. ``pos`` is the query's absolute position (a scalar), ``s_idx``
-    its place along the cache-block grid axis — every entry point maps its
-    own grid onto these two values, so the f32 computation (and therefore
-    the bits) is identical across layouts.
-    """
+def _unpack2(q):  # int8 packed 2-bit fields -> four sign-extended planes
+    f0 = jnp.right_shift(jnp.left_shift(q, 6), 6)
+    f1 = jnp.right_shift(jnp.left_shift(q, 4), 6)
+    f2 = jnp.right_shift(jnp.left_shift(q, 2), 6)
+    f3 = jnp.right_shift(q, 6)
+    return f0, f1, f2, f3
+
+
+def _dequant4_block(q_ref, s_ref, bs):
+    """Unpack + dequantize one packed-int4 cache block in VMEM -> (bs, hd)."""
+    qq = q_ref[...].reshape(bs, -1)                       # (bs, hd//2) int8
+    ss = s_ref[...].reshape(bs)
+    lo, hi = _unpack4(qq)
+    x_int = jnp.stack([lo, hi], axis=-1).reshape(bs, -1)  # (bs, hd)
+    return x_int.astype(jnp.float32) * ss[:, None]
+
+
+def _dequant2_block(q_ref, s_ref, bs):
+    """Unpack + dequantize one packed-int2 (KV2 tier) block -> (bs, hd)."""
+    qq = q_ref[...].reshape(bs, -1)                       # (bs, hd//4) int8
+    ss = s_ref[...].reshape(bs)
+    f0, f1, f2, f3 = _unpack2(qq)
+    x_int = jnp.stack([f0, f1, f2, f3], axis=-1).reshape(bs, -1)
+    return x_int.astype(jnp.float32) * ss[:, None]
+
+
+def _flash_core(pos, s_idx, q_ref, k, v, out_ref, m_ref, l_ref, acc_ref,
+                *, n_s: int, bs: int, scale: float):
+    """The online-softmax scan step on dequantized (bs, hd) k/v blocks.
+    Every entry point feeds this same f32 computation, so two call paths
+    that hand it elementwise-identical k/v produce identical bits."""
     hd = out_ref.shape[-1]
 
     @pl.when(s_idx == 0)
@@ -68,18 +98,6 @@ def _flash_step(pos, s_idx, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, out_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[...].reshape(-1, hd).astype(jnp.float32)   # (G, hd)
-    # unpack + dequantize this cache block in VMEM
-    kq = kq_ref[...].reshape(bs, -1)                     # (bs, hd//2) int8
-    ks = ks_ref[...].reshape(bs)
-    lo, hi = _unpack4(kq)
-    k_int = jnp.stack([lo, hi], axis=-1).reshape(bs, -1)  # (bs, hd)
-    k = k_int.astype(jnp.float32) * ks[:, None]
-    vq = vq_ref[...].reshape(bs, -1)
-    vs = vs_ref[...].reshape(bs)
-    lo_v, hi_v = _unpack4(vq)
-    v_int = jnp.stack([lo_v, hi_v], axis=-1).reshape(bs, -1)
-    v = v_int.astype(jnp.float32) * vs[:, None]
-
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     # causal validity: absolute cache position <= pos
@@ -101,6 +119,21 @@ def _flash_step(pos, s_idx, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, out_ref,
         out_ref[...] = (acc_ref[...] /
                         jnp.maximum(l_ref[...], 1e-30)).astype(
                             out_ref.dtype).reshape(out_ref.shape)
+
+
+def _flash_step(pos, s_idx, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, out_ref,
+                m_ref, l_ref, acc_ref, *, n_s: int, bs: int, scale: float):
+    """One cache-block step of the online-softmax scan for ONE query row
+    group. ``pos`` is the query's absolute position (a scalar), ``s_idx``
+    its place along the cache-block grid axis — every entry point maps its
+    own grid onto these two values, so the f32 computation (and therefore
+    the bits) is identical across layouts.
+    """
+    # unpack + dequantize this cache block in VMEM
+    k = _dequant4_block(kq_ref, ks_ref, bs)
+    v = _dequant4_block(vq_ref, vs_ref, bs)
+    _flash_core(pos, s_idx, q_ref, k, v, out_ref, m_ref, l_ref, acc_ref,
+                n_s=n_s, bs=bs, scale=scale)
 
 
 def _kernel(pos_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, out_ref,
@@ -308,3 +341,107 @@ def kv4_paged_verify_attention(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
     )(block_tables, pos, q, k_pages, k_scale_pages, v_pages, v_scale_pages)
+
+
+def _tiered_paged_kernel(bt_ref, tt_ref, pos_ref, q_ref, kq_ref, ks_ref,
+                         vq_ref, vs_ref, k2q_ref, k2s_ref, v2q_ref, v2s_ref,
+                         out_ref, m_ref, l_ref, acc_ref, *, n_s, bs, scale):
+    # per-page tier routing: the index maps already DMA'd the right slab
+    # block (the other slab's block is its null page); the body dequantizes
+    # both candidates and selects by the prefetched tier id. On a tier-0
+    # page the selected f32 values are elementwise identical to what
+    # _flash_step computes, so the shared core produces identical bits.
+    tier = tt_ref[pl.program_id(0), pl.program_id(2)]
+    k4 = _dequant4_block(kq_ref, ks_ref, bs)
+    v4 = _dequant4_block(vq_ref, vs_ref, bs)
+    k2 = _dequant2_block(k2q_ref, k2s_ref, bs)
+    v2 = _dequant2_block(v2q_ref, v2s_ref, bs)
+    k = jnp.where(tier == 1, k2, k4)
+    v = jnp.where(tier == 1, v2, v4)
+    _flash_core(pos_ref[0], pl.program_id(2), q_ref, k, v, out_ref,
+                m_ref, l_ref, acc_ref, n_s=n_s, bs=bs, scale=scale)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kv_tiered_paged_decode_attention(
+    q: jax.Array,              # (B, KVH, G, hd) — grouped query heads
+    k_pages: jax.Array,        # (P, ps, KVH, hd//2) int8, packed nibbles
+    k_scale_pages: jax.Array,  # (P, ps, KVH) f32 per-token-head scales
+    v_pages: jax.Array,        # (P, ps, KVH, hd//2) int8
+    v_scale_pages: jax.Array,  # (P, ps, KVH) f32
+    k2_pages: jax.Array,       # (P2, ps, KVH, hd//4) int8, 2-bit fields
+    k2_scale_pages: jax.Array,  # (P2, ps, KVH) f32
+    v2_pages: jax.Array,       # (P2, ps, KVH, hd//4) int8
+    v2_scale_pages: jax.Array,  # (P2, ps, KVH) f32
+    block_tables: jax.Array,   # (B, Pmax) int32 — seq-order page ids
+    tier_tables: jax.Array,    # (B, Pmax) int32 — per-page tier (0/1)
+    pos: jax.Array,            # (B,) int32 — current position (inclusive)
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Mixed-tier decode attention over the KV4 + KV2 page slabs.
+
+    The precision ladder's read path: ``tier_tables[b, i]`` says which
+    slab ``block_tables[b, i]`` indexes — 0 for the packed-int4 pool,
+    1 for the packed-int2 (demoted) pool. Both tables are scalar-
+    prefetched; each grid step DMAs one page from the slab the tier
+    selects (the other slab contributes only its reserved null page 0)
+    and the body picks the dequantized block by tier id. Undemoted
+    pages therefore flow through the exact f32 computation of
+    :func:`kv4_paged_decode_attention` — an all-tier-0 call is bit-exact
+    against it — while demoted pages stream at int2 width with their
+    original scales (clamp error bound in docs/format.md).
+    """
+    b, kvh, g, hd = q.shape
+    n_pages, ps, _, hdp = k_pages.shape
+    _, n_s = block_tables.shape
+    assert hdp * 2 == hd, (hd, hdp)
+    assert k2_pages.shape[-1] * 4 == hd, (hd, k2_pages.shape)
+    scale = hd ** -0.5
+
+    def kv4_map(ib, ih, isb, bt, tt):
+        return (jnp.where(tt[ib, isb] == 1, 0, bt[ib, isb]), 0, ih, 0)
+
+    def kv4_smap(ib, ih, isb, bt, tt):
+        return (jnp.where(tt[ib, isb] == 1, 0, bt[ib, isb]), 0, ih)
+
+    def kv2_map(ib, ih, isb, bt, tt):
+        return (jnp.where(tt[ib, isb] == 1, bt[ib, isb], 0), 0, ih, 0)
+
+    def kv2_smap(ib, ih, isb, bt, tt):
+        return (jnp.where(tt[ib, isb] == 1, bt[ib, isb], 0), 0, ih)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, n_s),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ib, ih, isb, bt, tt: (ib,)),    # pos
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda ib, ih, isb, bt, tt: (ib, ih, 0, 0)),  # q
+            pl.BlockSpec((1, ps, 1, hdp), kv4_map),                   # k_q
+            pl.BlockSpec((1, ps, 1), kv4_smap),                       # k_s
+            pl.BlockSpec((1, ps, 1, hdp), kv4_map),                   # v_q
+            pl.BlockSpec((1, ps, 1), kv4_smap),                       # v_s
+            pl.BlockSpec((1, ps, 1, hd // 4), kv2_map),               # k2_q
+            pl.BlockSpec((1, ps, 1), kv2_smap),                       # k2_s
+            pl.BlockSpec((1, ps, 1, hd // 4), kv2_map),               # v2_q
+            pl.BlockSpec((1, ps, 1), kv2_smap),                       # v2_s
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda ib, ih, isb, bt, tt: (ib, ih, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),     # running max
+            pltpu.VMEM((g, 1), jnp.float32),     # running denominator
+            pltpu.VMEM((g, hd), jnp.float32),    # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_tiered_paged_kernel, n_s=n_s, bs=ps, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), q.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(block_tables, tier_tables, pos, q, k_pages, k_scale_pages,
+      v_pages, v_scale_pages, k2_pages, k2_scale_pages,
+      v2_pages, v2_scale_pages)

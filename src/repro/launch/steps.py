@@ -336,7 +336,7 @@ def make_engine_prefill_chunk(cfg: ModelConfig, *,
 
 
 def make_engine_decode(cfg: ModelConfig, *, msb_skip: bool = False,
-                       with_telemetry: bool = True,
+                       with_telemetry: bool = True, kv2: bool = False,
                        mesh: Optional[Mesh] = None,
                        param_specs=None, pool_specs=None):
     """One continuous-batching decode step over every decode slot.
@@ -355,13 +355,36 @@ def make_engine_decode(cfg: ModelConfig, *, msb_skip: bool = False,
     the wire accounting from the traced program (telemetry comes back
     empty) — the draft runs γ times per emitted batch, so it stays lean.
 
+    ``kv2=True`` builds the precision-ladder decode step instead: the
+    returned function takes an extra ``tier_tables`` (B, Pmax) argument
+    after ``block_tables`` and reads each page from the slab its tier id
+    names (``models.model.decode_step_paged`` with ``tier_tables``; the
+    pool state must carry the KV2 slab, i.e. ``PoolConfig.kv2_pages >
+    0``). Unsharded engines only — the ladder's host bookkeeping is
+    single-pool.
+
     With a ``mesh``, the step runs inside shard_map: decode slots shard
     over the "data" axis (block tables carry the slot's data shard's
     local page ids), KV heads and weights over "model". Logits come back
     with the vocab shards gathered, so the host-side sampling loop is
     unchanged.
     """
+    if kv2 and mesh is not None:
+        raise NotImplementedError(
+            "the KV2 precision ladder is unsharded-only (kv2=True with a "
+            "mesh is not wired up; see docs/serving.md)")
     if mesh is None:
+        if kv2:
+            def engine_decode_kv2(params, pool, token, pos, block_tables,
+                                  tier_tables):
+                return M.decode_step_paged(cfg, params, pool, token, pos,
+                                           block_tables,
+                                           tier_tables=tier_tables,
+                                           msb_skip=msb_skip,
+                                           with_telemetry=with_telemetry)
+
+            return engine_decode_kv2
+
         def engine_decode(params, pool, token, pos, block_tables):
             return M.decode_step_paged(cfg, params, pool, token, pos,
                                        block_tables, msb_skip=msb_skip,

@@ -672,14 +672,21 @@ def _act_subprecision_sparsity(x: jax.Array) -> jax.Array:
 
 def attn_decode_paged(cfg: ModelConfig, ld: LayerDef, p: Params,
                       x: jax.Array, pool: Cache, block_tables: jax.Array,
-                      pos: jax.Array) -> Tuple[jax.Array, Cache]:
+                      pos: jax.Array,
+                      tier_tables: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, Cache]:
     """One-token attention against the paged pool. x: (B, D).
 
     Writes the new token's quantized K/V into its page slot, then attends
     through the block table with the paged Pallas kernel (the pool stays
-    in packed-int4 wire format end to end).
+    in packed-int4 wire format end to end). With ``tier_tables`` (B, Pmax)
+    the mixed-tier kernel reads each page from the slab its tier id names
+    (the KV2 precision ladder — serving/kv_pool.py); the write still lands
+    in the KV4 slab, since the engine promotes any page before it is
+    written (the frontier page is always tier 0).
     """
-    from repro.kernels.kv_attention import kv4_paged_decode_attention
+    from repro.kernels.kv_attention import (kv4_paged_decode_attention,
+                                            kv_tiered_paged_decode_attention)
     b, d = x.shape
     kvh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
     theta = ld.rope_theta or cfg.rope_theta
@@ -691,29 +698,43 @@ def attn_decode_paged(cfg: ModelConfig, ld: LayerDef, p: Params,
     n_steps = block_tables.shape[1]
     bidx = jnp.arange(b)
     page = block_tables[bidx, jnp.clip(pos // ps, 0, n_steps - 1)]
+    if tier_tables is not None:
+        # a demoted page id indexes the KV2 slab — never scatter there
+        page = jnp.where(
+            tier_tables[bidx, jnp.clip(pos // ps, 0, n_steps - 1)] == 0,
+            page, 0)
     off = pos % ps
     pool = {
+        **pool,                       # KV2 slab (if any) passes through
         "k_q": pool["k_q"].at[page, off].set(kq),
         "k_s": pool["k_s"].at[page, off].set(ks),
         "v_q": pool["v_q"].at[page, off].set(vq),
         "v_s": pool["v_s"].at[page, off].set(vs),
     }
-    o = kv4_paged_decode_attention(
-        q.reshape(b, kvh, g, cfg.hd), pool["k_q"], pool["k_s"],
-        pool["v_q"], pool["v_s"], block_tables, pos)
+    if tier_tables is None:
+        o = kv4_paged_decode_attention(
+            q.reshape(b, kvh, g, cfg.hd), pool["k_q"], pool["k_s"],
+            pool["v_q"], pool["v_s"], block_tables, pos)
+    else:
+        o = kv_tiered_paged_decode_attention(
+            q.reshape(b, kvh, g, cfg.hd), pool["k_q"], pool["k_s"],
+            pool["v_q"], pool["v_s"], pool["k2_q"], pool["k2_s"],
+            pool["v2_q"], pool["v2_s"], block_tables, tier_tables, pos)
     o = o.reshape(b, cfg.n_heads * cfg.hd)
     return linear(o, p["wo"], p.get("bo"), tp="row"), pool
 
 
 def _apply_layer_decode_paged(cfg, ld: LayerDef, p: Params, x, pool,
-                              block_tables, pos):
-    y, pool = attn_decode_paged(cfg, ld, p, x, pool, block_tables, pos)
+                              block_tables, pos, tier_tables=None):
+    y, pool = attn_decode_paged(cfg, ld, p, x, pool, block_tables, pos,
+                                tier_tables)
     return _apply_ffn_decode(cfg, ld, p, x + y), pool
 
 
 def decode_step_paged(cfg: ModelConfig, params: Params, pool: Cache,
                       token: jax.Array, pos: jax.Array,
                       block_tables: jax.Array, *,
+                      tier_tables: Optional[jax.Array] = None,
                       msb_skip: bool = False,
                       with_telemetry: bool = True
                       ) -> Tuple[jax.Array, Cache, Dict[str, jax.Array]]:
@@ -739,14 +760,17 @@ def decode_step_paged(cfg: ModelConfig, params: Params, pool: Cache,
     the draft's approximations, which the verification step overwrites.
     ``with_telemetry=False`` drops the wire accounting from the traced
     program (the draft hot path) and returns an empty telemetry dict.
+    ``tier_tables`` (B, Pmax) arms the KV2 precision-ladder read path
+    (see :func:`attn_decode_paged`); None keeps the KV4-only program.
     """
     with msb_skip_scope(msb_skip):
         return _decode_step_paged_body(cfg, params, pool, token, pos,
-                                       block_tables, with_telemetry)
+                                       block_tables, with_telemetry,
+                                       tier_tables)
 
 
 def _decode_step_paged_body(cfg, params, pool, token, pos, block_tables,
-                            with_telemetry):
+                            with_telemetry, tier_tables=None):
     dt = cfg.cdtype
     x = embed(token, params["embed"]["table"]).astype(dt)
     if cfg.name.startswith("gemma"):
@@ -764,7 +788,7 @@ def _decode_step_paged_body(cfg, params, pool, token, pos, block_tables,
                     tels.append(act_wire_telemetry(h))  # one per SUB-layer
                 h, c = _apply_layer_decode_paged(
                     cfg, ld, pslice[f"p{pi}"], h, cslice[f"p{pi}"],
-                    block_tables, pos)
+                    block_tables, pos, tier_tables)
                 new_c[f"p{pi}"] = c
             tel = stack_sublayer_telemetry(tels) if with_telemetry else {}
             return h, (new_c, tel)
@@ -813,6 +837,7 @@ def attn_verify_paged(cfg: ModelConfig, ld: LayerDef, p: Params,
     page = jnp.take_along_axis(block_tables, step, axis=1)  # (B, T)
     off = positions % ps
     pool = {
+        **pool,                       # KV2 slab (if any) passes through
         "k_q": pool["k_q"].at[page, off].set(kq),
         "k_s": pool["k_s"].at[page, off].set(ks),
         "v_q": pool["v_q"].at[page, off].set(vq),
@@ -932,6 +957,7 @@ def _attn_prefill_chunk_paged(cfg: ModelConfig, ld: LayerDef, p: Params,
                                              n_steps - 1)], 0)
     off = positions % ps
     pool = {
+        **pool,                       # KV2 slab (if any) passes through
         "k_q": pool["k_q"].at[page, off].set(kq[0]),
         "k_s": pool["k_s"].at[page, off].set(ks[0]),
         "v_q": pool["v_q"].at[page, off].set(vq[0]),

@@ -102,6 +102,15 @@ class Engine:
             from repro.distributed import tp
             self.pool.state = tp.device_put_tree(
                 self.pool.state, self._pool_specs, self.mesh)
+        # KV2 precision ladder: armed by PoolConfig.kv2_pages > 0. The
+        # decode step gains a tier-table argument and routes each page
+        # through the slab its tier id names; demotion/promotion policy
+        # runs host-side around the step (docs/serving.md §ladder).
+        self._kv2 = self.pool.kv2_armed
+        if self._kv2 and self.mesh is not None:
+            raise NotImplementedError(
+                "the KV2 precision ladder is unsharded-only "
+                "(kv2_pages > 0 with a mesh is not wired up)")
         self.sched = Scheduler(self.pool, sched_config, obs=self.obs)
         scfg = self.sched.cfg
         self._chunk = scfg.prefill_chunk
@@ -116,7 +125,7 @@ class Engine:
                                         pool_specs=self._pool_specs),
             donate_argnums=(1,))
         self._decode_fn = jax.jit(
-            S.make_engine_decode(cfg, mesh=self.mesh,
+            S.make_engine_decode(cfg, kv2=self._kv2, mesh=self.mesh,
                                  param_specs=self._param_specs,
                                  pool_specs=self._pool_specs),
             donate_argnums=(1,))
@@ -175,6 +184,13 @@ class Engine:
             "serving_layer_msb_sparsity_ratio", "token-weighted MSB4 "
             "sub-precision sparsity of the hidden stream entering each "
             "layer", unit="ratio", labelnames=("layer",))
+        self._g_kv2_used = r.gauge(
+            "serving_pool_kv2_pages_used", "pages currently held at the "
+            "KV2 tier (0 when the ladder is disarmed)", unit="pages")
+        self._g_kv_saved = r.gauge(
+            "serving_pool_kv_bytes_saved", "KV HBM bytes currently freed "
+            "by demoted pages (KV4 cost minus KV2 cost of held KV2 "
+            "pages)", unit="bytes")
 
     # -- public API --------------------------------------------------------
 
@@ -216,6 +232,8 @@ class Engine:
         tr = self.obs.tracer
         events: List[Tuple[int, int]] = []
         with tr.span("engine_step", step=self.steps):
+            if self._kv2:
+                self.pool.tick()
             with self._m_step_lat.time(phase="schedule"):
                 plan = self.sched.schedule()
             if self.slo is not None:
@@ -231,6 +249,12 @@ class Engine:
                 with tr.span("decode_batch", slots=len(plan.decode)):
                     with self._m_step_lat.time(phase="decode"):
                         events.extend(self._run_decode(plan.decode))
+            if self._kv2:
+                # background cold sweep AFTER the decode writes landed:
+                # a page demoted here is first read (tier-routed) next
+                # step, so the step that demotes never races its reader
+                with self._m_step_lat.time(phase="demote"):
+                    self.pool.demote_cold()
         self._m_steps.inc()
         self.steps += 1
         return events
@@ -267,11 +291,16 @@ class Engine:
                 tokens_per_step=self._chunk,
                 predict_seconds=self._phase_predictor("prefill"))
         if "decode" not in self._attr.phases():
+            decode_avals = (params_a, pool_a,
+                            sds((self._n_slots,), jnp.int32),
+                            sds((self._n_slots,), jnp.int32),
+                            sds((self._n_slots, self._n_page_steps),
+                                jnp.int32))
+            if self._kv2:  # tier tables ride after the block tables
+                decode_avals += (
+                    sds((self._n_slots, self._n_page_steps), jnp.int32),)
             self._attr.attribute(
-                "decode", self._decode_fn,
-                (params_a, pool_a, sds((self._n_slots,), jnp.int32),
-                 sds((self._n_slots,), jnp.int32),
-                 sds((self._n_slots, self._n_page_steps), jnp.int32)),
+                "decode", self._decode_fn, decode_avals,
                 tokens_per_step=self._n_slots,
                 predict_seconds=self._phase_predictor("decode"))
         return self._attr
@@ -335,6 +364,15 @@ class Engine:
                 r.value("serving_pool_utilization_ratio")),
             "pool_evictions": int(r.value("serving_pool_evictions_total")),
         }
+        if self._kv2:
+            out["pool_demotions"] = int(
+                r.value("serving_pool_demotions_total"))
+            out["pool_promotions"] = int(
+                r.value("serving_pool_promotions_total"))
+            out["kv_bytes_reclaimed"] = int(
+                r.value("serving_pool_kv_bytes_reclaimed_total"))
+            out["kv2_pages_used"] = int(self.pool.kv2_used)
+            out["kv_bytes_saved"] = int(self.pool.kv_bytes_saved())
         if self.layer_wire_bytes is not None and self.wire_tokens:
             wire = float(self.layer_wire_bytes.sum())
             dense = float(self.layer_dense_bytes.sum())
@@ -352,6 +390,8 @@ class Engine:
         the hot path never pays for them."""
         self._g_pool_free.set(self.pool.num_free)
         self._g_pool_util.set(self.pool.utilization())
+        self._g_kv2_used.set(self.pool.kv2_used)
+        self._g_kv_saved.set(self.pool.kv_bytes_saved())
         if self.layer_wire_bytes is not None and self.wire_tokens:
             per_tok = self.layer_wire_bytes / self.wire_tokens
             spars = self.layer_sparsity_sum / self.wire_tokens
@@ -426,6 +466,14 @@ class Engine:
         row[:len(pages)] = pages
         return row
 
+    def _tier_table_row(self, req: Request) -> np.ndarray:
+        """Per-page tier ids parallel to :meth:`_block_table_row` (the
+        padded tail is tier 0, matching the KV4 null page it points at)."""
+        row = np.zeros((self._n_page_steps,), np.int32)
+        tiers = self.pool.tiers_of(req.rid)
+        row[:len(tiers)] = tiers
+        return row
+
     def _prefill_tables(self, req: Request) -> np.ndarray:
         """(D, Pmax) block table for the prefill step: one row per data
         shard, the owning shard's row holding the request's (shard-local)
@@ -496,13 +544,30 @@ class Engine:
         token = np.zeros((B,), np.int32)
         pos = np.zeros((B,), np.int32)
         tables = np.zeros((B, self._n_page_steps), np.int32)
+        if self._kv2:
+            # touch BEFORE snapshotting tables: this step writes K/V at
+            # pos, so the page covering it must be KV4 (promote-on-touch)
+            # and its coldness stamp refreshed. Touching may swap page
+            # ids, hence the ordering.
+            ps = self.pool.page_size
+            for req in decode:
+                fp = (len(req.context) - 1) // ps
+                self.pool.touch(req.rid, fp, fp)
+            tiers = np.zeros((B, self._n_page_steps), np.int32)
+            for req in decode:
+                tiers[req.slot] = self._tier_table_row(req)
         for req in decode:
             token[req.slot] = req.context[-1]
             pos[req.slot] = len(req.context) - 1
             tables[req.slot] = self._block_table_row(req)
-        logits, self.pool.state, tel = self._decode_fn(
-            self.params, self.pool.state, jnp.asarray(token),
-            jnp.asarray(pos), jnp.asarray(tables))
+        if self._kv2:
+            logits, self.pool.state, tel = self._decode_fn(
+                self.params, self.pool.state, jnp.asarray(token),
+                jnp.asarray(pos), jnp.asarray(tables), jnp.asarray(tiers))
+        else:
+            logits, self.pool.state, tel = self._decode_fn(
+                self.params, self.pool.state, jnp.asarray(token),
+                jnp.asarray(pos), jnp.asarray(tables))
         logits = np.asarray(logits)
         sparsity = np.asarray(tel["sparsity"])
         layer_wire = np.asarray(tel["layer_wire_bytes"], np.float64)

@@ -47,6 +47,10 @@ KV2_HIGH = 1
 class PoolConfig:
     n_pages: int = 64        # physical pages, including the reserved null page
     page_size: int = 16      # tokens per page
+    # -- KV2 precision ladder (0 pages disables it entirely) ---------------
+    kv2_pages: int = 0       # KV2-tier pages, including a reserved null page
+    demote_min_sparsity: float = 0.75   # page_msb_sparsity floor to demote
+    demote_after_steps: int = 4         # engine steps a page must sit cold
 
 
 def pool_schema(cfg: ModelConfig, pool: PoolConfig) -> Schema:
@@ -58,12 +62,20 @@ def pool_schema(cfg: ModelConfig, pool: PoolConfig) -> Schema:
     check_paged_support(cfg)
     kvh, hd = cfg.n_kv_heads, cfg.hd
     np_, ps = pool.n_pages, pool.page_size
+    n2 = pool.kv2_pages
+    if n2:
+        if n2 < 2:
+            raise ValueError("kv2_pages must be >= 2 (one usable page "
+                             "beyond the reserved KV2 null page)")
+        if hd % 4:
+            raise ValueError(f"KV2 tier packs 4 fields/byte: head_dim "
+                             f"{hd} must be a multiple of 4")
 
     def layer_pool() -> Schema:
         # logical axes: the page slab shards over "data" (each data shard
         # owns a slab — request-level parallelism), KV heads over "model"
         # (tensor parallelism); see distributed/sharding.DEFAULT_RULES
-        return {
+        leaves = {
             "k_q": ParamSpec((np_, ps, kvh, hd // 2),
                              ("pages", None, "kv_heads", None),
                              jnp.int8, init="zeros"),
@@ -75,6 +87,25 @@ def pool_schema(cfg: ModelConfig, pool: PoolConfig) -> Schema:
             "v_s": ParamSpec((np_, ps, kvh), ("pages", None, "kv_heads"),
                              jnp.float32, init="ones"),
         }
+        if n2:
+            # KV2 slab: demoted pages, int2-band nibbles packed four per
+            # byte (core.packing.pack_plane width=2) + untouched scales.
+            # KV2 page 0 is the tier's own reserved null page.
+            leaves.update({
+                "k2_q": ParamSpec((n2, ps, kvh, hd // 4),
+                                  ("pages", None, "kv_heads", None),
+                                  jnp.int8, init="zeros"),
+                "k2_s": ParamSpec((n2, ps, kvh),
+                                  ("pages", None, "kv_heads"),
+                                  jnp.float32, init="ones"),
+                "v2_q": ParamSpec((n2, ps, kvh, hd // 4),
+                                  ("pages", None, "kv_heads", None),
+                                  jnp.int8, init="zeros"),
+                "v2_s": ParamSpec((n2, ps, kvh),
+                                  ("pages", None, "kv_heads"),
+                                  jnp.float32, init="ones"),
+            })
+        return leaves
 
     def stack(tree: Schema, repeat: int) -> Schema:
         return {k: ParamSpec((repeat,) + v.shape, ("layers",) + v.axes,
@@ -136,6 +167,10 @@ class PagedKVPool:
         if pool_cfg.n_pages // n_shards < 2:
             raise ValueError("need at least one page beyond the null page "
                              "in every shard")
+        if pool_cfg.kv2_pages and n_shards > 1:
+            raise NotImplementedError(
+                "the KV2 precision ladder supports unsharded pools only "
+                "(kv2_pages > 0 with a data mesh is not wired up)")
         self.cfg = cfg
         self.pool_cfg = pool_cfg
         self.n_shards = n_shards
@@ -147,6 +182,38 @@ class PagedKVPool:
         self._owner_shard: Dict[object, int] = {}
         self.evictions = 0
         self.on_evict: Optional[Callable[[object, List[int]], None]] = None
+        # -- KV2 tier bookkeeping (all empty/no-op when kv2_pages == 0) ----
+        # _tier[owner][i] is the tier (0=KV4, 1=KV2) of _owned[owner][i];
+        # tier-1 entries in _owned hold KV2-slab page ids. _stamp is the
+        # pool-clock value of each page's last write (demotion coldness);
+        # _spars caches each cold page's measured msb sparsity (pages are
+        # immutable once the write frontier moves past, so one device
+        # evaluation per page suffices).
+        self.clock = 0
+        self._free_kv2: collections.deque = collections.deque(
+            range(1, pool_cfg.kv2_pages)) if pool_cfg.kv2_pages else \
+            collections.deque()
+        self._tier: Dict[object, List[int]] = {}
+        self._stamp: Dict[object, List[int]] = {}
+        self._spars: Dict[object, List[Optional[float]]] = {}
+        self.demotions = 0
+        self.promotions = 0
+        self.kv_bytes_reclaimed = 0
+        self._owner_demotions: Dict[object, int] = {}
+        self._owner_promotions: Dict[object, int] = {}
+        # owners whose pages may be demoted. The engine refreshes this
+        # every step with the decode batch: prefill/verify attention read
+        # the pool through a tier-UNAWARE dense gather, so a demoted page
+        # under a mid-prefill (or waiting, or draft-window) owner would
+        # be read as garbage. Only owners whose every read goes through
+        # the tiered decode kernel are safe to demote.
+        self._demotable: set = set()
+        self._page_bytes = {0: 0, 1: 0}
+        for path, leaf in jax.tree_util.tree_leaves_with_path(self.state):
+            name = path[-1].key if hasattr(path[-1], "key") else ""
+            tier = 1 if name.startswith(("k2_", "v2_")) else 0
+            # leaf dims: (layers, pages, page_size, ...); bytes per page
+            self._page_bytes[tier] += leaf.nbytes // leaf.shape[1]
         if obs is not None:
             r = obs.registry
             self._m_evict = r.counter(
@@ -159,8 +226,21 @@ class PagedKVPool:
                 "serving_pool_pages_released_total",
                 "pages returned to the free lists (release/truncate/evict)",
                 unit="pages")
+            self._m_demote = r.counter(
+                "serving_pool_demotions_total",
+                "pages re-encoded down the ladder (KV4 -> KV2)",
+                unit="pages")
+            self._m_promote = r.counter(
+                "serving_pool_promotions_total",
+                "demoted pages re-encoded back up (KV2 -> KV4) on touch",
+                unit="pages")
+            self._m_reclaimed = r.counter(
+                "serving_pool_kv_bytes_reclaimed_total",
+                "KV HBM bytes freed by demotion events (cumulative; "
+                "promotions do not subtract)", unit="bytes")
         else:
             self._m_evict = self._m_alloc = self._m_freed = None
+            self._m_demote = self._m_promote = self._m_reclaimed = None
 
     # -- capacity ----------------------------------------------------------
 
@@ -215,15 +295,23 @@ class PagedKVPool:
         pages = [self._free[shard].popleft() for _ in range(n)]
         self._owned.setdefault(owner, []).extend(pages)
         self._owner_shard[owner] = shard
+        self._tier.setdefault(owner, []).extend([0] * n)
+        self._stamp.setdefault(owner, []).extend([self.clock] * n)
+        self._spars.setdefault(owner, []).extend([None] * n)
         if self._m_alloc is not None:
             self._m_alloc.inc(n)
         return pages
 
     def release(self, owner) -> List[int]:
-        """Return all of ``owner``'s pages to its shard's free list."""
+        """Return all of ``owner``'s pages to their tiers' free lists."""
         pages = self._owned.pop(owner, [])
+        tiers = self._tier.pop(owner, [0] * len(pages))
+        self._stamp.pop(owner, None)
+        self._spars.pop(owner, None)
+        self._demotable.discard(owner)
         shard = self._owner_shard.pop(owner, 0)
-        self._free[shard].extend(pages)
+        for p, t in zip(pages, tiers):
+            (self._free_kv2 if t else self._free[shard]).append(p)
         if pages and self._m_freed is not None:
             self._m_freed.inc(len(pages))
         return pages
@@ -249,11 +337,18 @@ class PagedKVPool:
             return []
         shard = self._owner_shard.get(owner, 0)
         tail = pages[keep:]
+        tail_tiers = self._tier[owner][keep:]
         del pages[keep:]
+        del self._tier[owner][keep:]
+        del self._stamp[owner][keep:]
+        del self._spars[owner][keep:]
         if not pages:
             del self._owned[owner]
             self._owner_shard.pop(owner, None)
-        self._free[shard].extend(tail)
+            for m in (self._tier, self._stamp, self._spars):
+                m.pop(owner, None)
+        for p, t in zip(tail, tail_tiers):
+            (self._free_kv2 if t else self._free[shard]).append(p)
         if self._m_freed is not None:
             self._m_freed.inc(len(tail))
         return tail
@@ -274,6 +369,191 @@ class PagedKVPool:
         if self._m_evict is not None:
             self._m_evict.inc()
         return self.release(owner)
+
+    # -- KV2 precision ladder ---------------------------------------------
+
+    @property
+    def kv2_armed(self) -> bool:
+        return self.pool_cfg.kv2_pages > 0
+
+    @property
+    def kv2_free(self) -> int:
+        return len(self._free_kv2)
+
+    @property
+    def kv2_used(self) -> int:
+        return (self.pool_cfg.kv2_pages - 1 - len(self._free_kv2)
+                if self.kv2_armed else 0)
+
+    def tiers_of(self, owner) -> List[int]:
+        """Per-page tier (0=KV4, 1=KV2) parallel to :meth:`pages_of`."""
+        return list(self._tier.get(owner, ()))
+
+    def tier_stats_of(self, owner) -> Dict[str, int]:
+        """Cumulative ladder transitions of ``owner``'s pages over its
+        whole lifetime (survives release/preemption — the counters are
+        never reset, matching the other per-request counters)."""
+        return {"demotions": self._owner_demotions.get(owner, 0),
+                "promotions": self._owner_promotions.get(owner, 0)}
+
+    def kv_bytes_saved(self) -> int:
+        """KV HBM bytes currently freed by demotion: held KV2 pages
+        priced at the KV4 rate minus the KV2 rate they actually occupy."""
+        held_kv2 = sum(sum(t) for t in self._tier.values())
+        return held_kv2 * (self._page_bytes[0] - self._page_bytes[1])
+
+    def kv_bytes_held(self) -> int:
+        """KV HBM bytes of all held pages at their current tiers."""
+        total = 0
+        for owner, pages in self._owned.items():
+            for t in self._tier[owner]:
+                total += self._page_bytes[t]
+        return total
+
+    def tick(self) -> None:
+        """Advance the demotion coldness clock (one engine step)."""
+        self.clock += 1
+
+    def set_demotable(self, owners) -> None:
+        """Declare the owners whose pages demotion may touch this step.
+
+        Only these owners' pages are demotion candidates (for both the
+        cold sweep and the pressure rung): everyone else — mid-prefill
+        prompts, speculative draft windows — is read through tier-unaware
+        gathers and must stay fully KV4. The engine calls this each step
+        with the decode batch; it replaces the previous set."""
+        self._demotable = set(owners)
+
+    def touch(self, owner, lo: int, hi: int) -> None:
+        """Mark ``owner``'s page indices ``[lo, hi]`` as about to be
+        written: stamps the coldness clock, invalidates cached sparsity,
+        and promotes any demoted page back to KV4 (promotion-on-touch —
+        writes always land in the KV4 slab). Call BEFORE the jitted step
+        whose writes cover the range. Out-of-range indices ignore."""
+        pages = self._owned.get(owner)
+        if not pages:
+            return
+        for i in range(max(lo, 0), min(hi, len(pages) - 1) + 1):
+            if self._tier[owner][i]:
+                if not self.promote(owner, i):
+                    raise RuntimeError(
+                        f"cannot promote page {i} of {owner!r}: KV4 "
+                        f"shard {self._owner_shard[owner]} exhausted")
+            self._stamp[owner][i] = self.clock
+            self._spars[owner][i] = None
+
+    def demote(self, owner, idx: int) -> bool:
+        """Re-encode ``owner``'s ``idx``-th page KV4 -> KV2 (False when
+        the KV2 slab is full or the page is already demoted)."""
+        if not self.kv2_armed or self._tier[owner][idx]:
+            return False
+        if not self._free_kv2:
+            return False
+        from repro.serving import tiering
+        shard = self._owner_shard[owner]
+        src = self._owned[owner][idx] + shard * self.pages_per_shard
+        dst = self._free_kv2.popleft()
+        self.state = tiering.demote_page(self.state, src, dst)
+        self._free[shard].append(self._owned[owner][idx])
+        self._owned[owner][idx] = dst
+        self._tier[owner][idx] = 1
+        self.demotions += 1
+        self._owner_demotions[owner] = \
+            self._owner_demotions.get(owner, 0) + 1
+        saved = self._page_bytes[0] - self._page_bytes[1]
+        self.kv_bytes_reclaimed += saved
+        if self._m_demote is not None:
+            self._m_demote.inc()
+            self._m_reclaimed.inc(saved)
+        return True
+
+    def promote(self, owner, idx: int) -> bool:
+        """Re-encode ``owner``'s ``idx``-th page KV2 -> KV4 (exact;
+        False when the owner's KV4 shard has no free page)."""
+        if not self._tier[owner][idx]:
+            return True
+        shard = self._owner_shard[owner]
+        if not self._free[shard]:
+            return False
+        from repro.serving import tiering
+        src = self._owned[owner][idx]
+        dst = self._free[shard].popleft()
+        self.state = tiering.promote_page(
+            self.state, src, dst + shard * self.pages_per_shard)
+        self._free_kv2.append(src)
+        self._owned[owner][idx] = dst
+        self._tier[owner][idx] = 0
+        self.promotions += 1
+        self._owner_promotions[owner] = \
+            self._owner_promotions.get(owner, 0) + 1
+        if self._m_promote is not None:
+            self._m_promote.inc()
+        return True
+
+    def _demote_candidates(self, shard: Optional[int], min_age: int):
+        """(stamp, owner, idx) of demotable pages, coldest first: tier-0,
+        owner in the :meth:`set_demotable` set, at least ``min_age``
+        clock ticks since last write, and never an owner's final
+        (write-frontier) page."""
+        out = []
+        for owner, pages in self._owned.items():
+            if owner not in self._demotable:
+                continue
+            if shard is not None and self._owner_shard[owner] != shard:
+                continue
+            for i in range(len(pages) - 1):        # frontier page excluded
+                if self._tier[owner][i]:
+                    continue
+                if self.clock - self._stamp[owner][i] >= min_age:
+                    out.append((self._stamp[owner][i], owner, i))
+        out.sort(key=lambda c: c[0])
+        return out
+
+    def _page_sparsity(self, owner, idx: int) -> float:
+        cached = self._spars[owner][idx]
+        if cached is None:
+            cached = float(self.page_msb_sparsity(
+                [self._owned[owner][idx]], self._owner_shard[owner])[0])
+            self._spars[owner][idx] = cached
+        return cached
+
+    def demote_cold(self, max_pages: Optional[int] = None) -> int:
+        """Background demotion sweep (the engine calls this every step):
+        demote cold pages — untouched for ``demote_after_steps`` ticks —
+        whose measured ``page_msb_sparsity`` clears
+        ``demote_min_sparsity``, coldest first, bounded by KV2 slab
+        occupancy (and ``max_pages`` when given). Returns pages demoted.
+        """
+        if not self.kv2_armed:
+            return 0
+        done = 0
+        for _, owner, i in self._demote_candidates(
+                None, self.pool_cfg.demote_after_steps):
+            if not self._free_kv2 or (max_pages is not None
+                                      and done >= max_pages):
+                break
+            if self.pool_cfg.demote_min_sparsity > 0.0 and \
+                    self._page_sparsity(owner, i) < \
+                    self.pool_cfg.demote_min_sparsity:
+                continue
+            if self.demote(owner, i):
+                done += 1
+        return done
+
+    def demote_for_pressure(self, shard: int, n: int = 1) -> int:
+        """Ladder rung between "no free page" and preemption: demote up
+        to ``n`` of ``shard``'s coldest non-frontier KV4 pages regardless
+        of their sparsity (the clamp error stays bounded — docs/format.md)
+        to free KV4 pages without evicting anyone. Returns pages freed."""
+        if not self.kv2_armed:
+            return 0
+        done = 0
+        for _, owner, i in self._demote_candidates(shard, 1):
+            if done >= n or not self._free_kv2:
+                break
+            if self.demote(owner, i):
+                done += 1
+        return done
 
     # -- telemetry ---------------------------------------------------------
 
@@ -301,7 +581,7 @@ class PagedKVPool:
         cnt = 0
         for path, leaf in jax.tree_util.tree_leaves_with_path(self.state):
             name = path[-1].key if hasattr(path[-1], "key") else ""
-            if not name.endswith("_q"):
+            if name not in ("k_q", "v_q"):    # KV2 slab has its own ids
                 continue
             sel = leaf[:, idx]                       # (L, n, ps, kvh, hd/2)
             lo = jnp.right_shift(jnp.left_shift(sel, 4), 4)

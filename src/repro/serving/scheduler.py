@@ -4,9 +4,12 @@ Every engine step the scheduler emits a :class:`StepPlan`:
 
   * ``decode``  — the running requests (one token each). Before planning,
     each running request that crosses a page boundary gets one new page;
-    if the pool is out of pages, the *youngest* running request is
-    preempted (recompute-style: its pages are evicted and it re-enters
-    the waiting queue with its generated tokens folded into the prompt).
+    if the pool is out of pages the scheduler climbs the eviction ladder:
+    first demote the shard's coldest decode-owned page KV4 -> KV2 (when
+    the precision ladder is armed; frees a KV4 page without evicting
+    anyone), then preempt the *youngest* running request (recompute-style:
+    its pages are evicted and it re-enters the waiting queue with its
+    generated tokens folded into the prompt).
   * ``prefill`` — FCFS chunks of waiting prompts, bounded by the step's
     remaining token budget, free decode slots, and free pages. Chunked
     prefill lets a long prompt share steps with in-flight decodes instead
@@ -76,6 +79,10 @@ class Request:
     draft_accepted: int = 0          # ... of those, accepted
     spec_steps: int = 0              # draft+verify cycles run
     spec_emitted: int = 0            # tokens emitted by those cycles
+    # KV2 precision ladder (serving/kv_pool.py): cumulative page tier
+    # transitions this request's cache underwent (0/0 when disarmed)
+    kv_demotions: int = 0
+    kv_promotions: int = 0
 
     def __post_init__(self):
         if not self.context:
@@ -138,6 +145,10 @@ class Request:
             "spec_tokens_per_step": (
                 self.spec_emitted / self.spec_steps
                 if self.spec_steps else float("nan")),
+            # KV2 precision ladder: pages of this request's cache demoted
+            # to the int2 tier (and promoted back on touch) over its life
+            "kv_demotions": self.kv_demotions,
+            "kv_promotions": self.kv_promotions,
         }
 
 
@@ -278,6 +289,9 @@ class Scheduler:
 
     def finish(self, req: Request) -> None:
         req.status = FINISHED
+        ts = self.pool.tier_stats_of(req.rid)
+        req.kv_demotions = ts["demotions"]
+        req.kv_promotions = ts["promotions"]
         if req in self.running:
             self.running.remove(req)
         if req in self.waiting:
@@ -336,6 +350,14 @@ class Scheduler:
     def schedule(self) -> StepPlan:
         plan = StepPlan(prefill=[], decode=[])
 
+        # KV2 precision ladder: only the decode set's pages may be
+        # demoted — everyone else (mid-prefill prompts) is read through
+        # tier-unaware gathers. Refresh the pool's demotable set before
+        # any pressure handling so the ladder rung below can act.
+        if self.pool.kv2_armed:
+            self.pool.set_demotable(
+                [r.rid for r in self.running if r.status == RUNNING])
+
         # 1. decode set — grow pages, preempting the youngest on pressure.
         # The victim can be OLDER than the request that hit pressure (when
         # that request is itself the youngest), so the decode list is only
@@ -344,6 +366,11 @@ class Scheduler:
             if req.status != RUNNING:
                 continue
             while not self._ensure_decode_page(req):
+                # eviction ladder, rung 1 (KV4 -> KV2): demote the
+                # shard's coldest demotable page to free a KV4 page
+                # before anyone is preempted (rung 2: KV2 -> drop)
+                if self.pool.demote_for_pressure(self._shard(req)):
+                    continue
                 # only a victim holding pages in the SAME data shard can
                 # relieve this request's pressure (per-shard free lists)
                 shard = self._shard(req)

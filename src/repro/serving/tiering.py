@@ -1,0 +1,88 @@
+"""Device-side KV tier transitions: KV4 <-> KV2 page re-codecs.
+
+The precision ladder's device half. ``serving/kv_pool.py`` owns the host
+policy (free lists, tier bookkeeping, demotion candidates — host-only
+code under the SPL002 lint contract); this module owns the jitted jnp
+work of moving one page between the packed-int4 slab (``k_q``/``v_q``,
+two nibbles per byte) and the packed-int2 slab (``k2_q``/``v2_q``, four
+two-bit fields per byte, present only when ``PoolConfig.kv2_pages > 0``).
+
+**Demotion** (KV4 -> KV2) clamps each signed int4 nibble to the signed
+int2 band ``[KV2_LOW, KV2_HIGH] = [-2, 1]`` and repacks four-per-byte via
+the parameterized plane codec (``core.packing.pack_plane`` at
+``width=2``); per-token-head f32 scales are copied unchanged. Nibbles
+already in band (what ``page_msb_sparsity`` measures) survive exactly, so
+a fully in-band page round-trips losslessly; an out-of-band nibble lands
+on the nearest band edge with integer error at most 6 (worst case
+``-8 -> -2``), i.e. dequantized error at most ``6 * scale`` per element
+(see docs/format.md for the resulting logit error bound).
+
+**Promotion** (KV2 -> KV4) sign-extends each two-bit field back to an
+int4 nibble and repacks two-per-byte — always exact, since the int2 band
+is a subset of the int4 range. demote -> promote is therefore the
+identity on in-band pages and a documented clamp elsewhere.
+
+Both ops take the whole device pool state plus traced int32 page ids
+(one source, one destination), so a single compilation serves every
+page transition of a run. The vacated source page is left as-is: its id
+returns to a free list and is fully rewritten before it is ever read
+again, exactly like an evicted page.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import pack_plane, unpack_plane
+
+# signed int2 band of a cached int4 nibble (see kv_pool.KV2_LOW/KV2_HIGH;
+# duplicated here to keep kv_pool free of device-module import cycles)
+KV2_LOW = -2
+KV2_HIGH = 1
+
+_PAIRS = (("k_q", "k_s", "k2_q", "k2_s"),
+          ("v_q", "v_s", "v2_q", "v2_s"))
+
+
+def _map_layer_groups(state, fn):
+    """Apply ``fn`` to every per-layer leaf dict (the dicts holding the
+    ``k_q``/``v_q`` slabs) of the nested pool-state tree."""
+    def rec(node):
+        if isinstance(node, dict):
+            if "k_q" in node:
+                return fn(node)
+            return {k: rec(v) for k, v in node.items()}
+        return node
+    return rec(state)
+
+
+@jax.jit
+def demote_page(state, src, dst):
+    """Re-encode KV4 page ``src`` into KV2 page ``dst``.
+
+    ``src`` indexes the global page axis of the KV4 slab, ``dst`` the
+    KV2 slab; both are traced int32 scalars. Returns the new pool state
+    (KV4 source left stale — its id goes back to the free list).
+    """
+    def grp(lp):
+        out = dict(lp)
+        for q4, s4, q2, s2 in _PAIRS:
+            nib = unpack_plane(lp[q4][:, src], width=4, signed=True)
+            nib = jnp.clip(nib, KV2_LOW, KV2_HIGH)
+            out[q2] = lp[q2].at[:, dst].set(pack_plane(nib, width=2))
+            out[s2] = lp[s2].at[:, dst].set(lp[s4][:, src])
+        return out
+    return _map_layer_groups(state, grp)
+
+
+@jax.jit
+def promote_page(state, src, dst):
+    """Re-encode KV2 page ``src`` back into KV4 page ``dst`` (exact)."""
+    def grp(lp):
+        out = dict(lp)
+        for q4, s4, q2, s2 in _PAIRS:
+            nib = unpack_plane(lp[q2][:, src], width=2, signed=True)
+            out[q4] = lp[q4].at[:, dst].set(pack_plane(nib, width=4))
+            out[s4] = lp[s4].at[:, dst].set(lp[s2][:, src])
+        return out
+    return _map_layer_groups(state, grp)

@@ -348,7 +348,9 @@ def test_engine_metrics_and_trace_end_to_end(qparams):
                       "act_wire_bytes_per_token", "wire_tokens",
                       "draft_tokens", "act_wire_compression_pct",
                       "preemptions", "spec_acceptance_rate",
-                      "spec_tokens_per_step"}
+                      "spec_tokens_per_step", "kv_demotions",
+                      "kv_promotions"}
+    assert s["kv_demotions"] == 0 and s["kv_promotions"] == 0  # disarmed
 
     # -- registry totals consistent with per-request truths --
     r = eng.obs.registry

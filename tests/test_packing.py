@@ -149,6 +149,102 @@ def test_encode_packed_jittable():
                                   np.asarray(x))
 
 
+# ---------------------------------------------------------------------------
+# parameterized plane codec (pack_plane / unpack_plane, docs/format.md)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("width", P.PLANE_WIDTHS)
+def test_plane_roundtrip_exhaustive_bytes(width):
+    """Every possible packed byte survives unpack -> pack at every width
+    (and therefore every field-value combination round-trips): the codec
+    pair is a bijection between bytes and field tuples."""
+    b = jnp.arange(-128, 128, dtype=jnp.int8).reshape(16, 16)
+    for signed in (True, False):
+        fields = P.unpack_plane(b, width=width, signed=signed)
+        assert fields.shape == (16, 16 * (8 // width))
+        np.testing.assert_array_equal(
+            np.asarray(P.pack_plane(fields, width=width)), np.asarray(b))
+
+
+def test_plane_roundtrip_exhaustive_int2_values():
+    """k=2 mirror of test_roundtrip_all_int8_values: every signed int2
+    value in every one of the four byte positions round-trips exactly."""
+    import itertools
+    combos = np.asarray(list(itertools.product(range(-2, 2), repeat=4)),
+                        np.int8)                     # (256, 4): all tuples
+    packed = P.pack_plane(jnp.asarray(combos), width=2)
+    assert packed.shape == (256, 1)
+    np.testing.assert_array_equal(
+        np.asarray(P.unpack_plane(packed, width=2, signed=True)), combos)
+    # unsigned: [0, 3] in every position
+    u = np.asarray(list(itertools.product(range(4), repeat=4)), np.int8)
+    pu = P.pack_plane(jnp.asarray(u), width=2)
+    np.testing.assert_array_equal(
+        np.asarray(P.unpack_plane(pu, width=2, signed=False)), u)
+
+
+def test_plane_width2_byte_layout_little_endian():
+    """Field i of a byte lives at bits [2i, 2i+2): the 2-bit analogue of
+    test_nibble_pair_layout's low-nibble-first rule."""
+    x = jnp.asarray([[1, -2, 0, -1]], jnp.int8)
+    packed = np.asarray(P.pack_plane(x, width=2)).astype(np.uint8)
+    # 0b01 | 0b10<<2 | 0b00<<4 | 0b11<<6 == 0xC9
+    np.testing.assert_array_equal(packed, [[0xC9]])
+
+
+def test_plane_width4_is_the_nibble_codec():
+    """pack_nibbles/unpack_nibbles are the width=4 specialization."""
+    x = jnp.arange(-8, 8, dtype=jnp.int8).reshape(2, 8)
+    np.testing.assert_array_equal(np.asarray(P.pack_plane(x, width=4)),
+                                  np.asarray(P.pack_nibbles(x)))
+    p = P.pack_nibbles(x)
+    for signed in (True, False):
+        np.testing.assert_array_equal(
+            np.asarray(P.unpack_plane(p, width=4, signed=signed)),
+            np.asarray(P.unpack_nibbles(p, signed=signed)))
+
+
+def test_plane_width8_is_identity():
+    x = jnp.arange(-128, 128, dtype=jnp.int8).reshape(4, 64)
+    np.testing.assert_array_equal(np.asarray(P.pack_plane(x, width=8)),
+                                  np.asarray(x))
+    np.testing.assert_array_equal(
+        np.asarray(P.unpack_plane(x, width=8, signed=True)), np.asarray(x))
+
+
+def test_plane_invalid_width_rejected():
+    x = jnp.zeros((1, 8), jnp.int8)
+    for width in (0, 3, 5, 16):
+        with pytest.raises(ValueError):
+            P.pack_plane(x, width=width)
+        with pytest.raises(ValueError):
+            P.unpack_plane(x, width=width, signed=True)
+    with pytest.raises(ValueError):
+        P.predicted_wire_bytes(8, 0.5, width=3)
+
+
+@pytest.mark.property
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 2, 4, 8]))
+def test_plane_roundtrip_random(seed, width):
+    half = 1 << (width - 1)
+    x = jax.random.randint(jax.random.PRNGKey(seed), (5, 24), -half, half,
+                           dtype=jnp.int8)
+    p = P.pack_plane(x, width=width)
+    assert p.shape == (5, 24 * width // 8)
+    assert (P.unpack_plane(p, width=width, signed=True) == x).all()
+
+
+def test_predicted_wire_bytes_width4_matches_eq1():
+    """The generalized prediction at width=4 IS the paper's Eq. 1."""
+    for s in (0.0, 0.25, 0.8, 1.0):
+        assert P.predicted_wire_bytes(64 * 256, s) == pytest.approx(
+            encoded_bytes((64, 256), s))
+    # width=8 degenerates to dense int8 + the bitmap
+    assert P.predicted_wire_bytes(100, 0.7, width=8) == pytest.approx(
+        100 * (1 + 1 / 8))
+
+
 def test_planes_packed_roundtrip():
     """Kernel operand form: both packed planes unpack to the reference
     decomposition."""
